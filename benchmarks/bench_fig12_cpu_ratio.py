@@ -1,0 +1,32 @@
+"""Fig. 12 — CPU:GPU ratio sweep (FIFO, single-GPU trace): a richer baseline
+server narrows Synergy's gap but TUNE stays ahead (paper: 3.4x..1.8x)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import FAST, run_policies, speedup
+from repro.core.cluster import ServerSpec
+from repro.core.trace import TraceConfig, generate
+
+
+def run():
+    rows = []
+    ratios = (3, 6) if FAST else (3, 4, 5, 6)
+    load = 9.0
+    for ratio in ratios:
+        spec = ServerSpec(gpus=8, cpus=8.0 * ratio, mem=500.0)
+        jobs = generate(TraceConfig(n_jobs=900 if FAST else 2000,
+                                    split=(20, 70, 10), arrival="poisson",
+                                    jobs_per_hour=load, multi_gpu=False,
+                                    seed=23))
+        t0 = time.perf_counter()
+        sub = run_policies(jobs, 16, ["fifo"], ["proportional", "tune"],
+                           spec=spec, steady_skip=300, steady_count=400)
+        sp = speedup(sub, "fifo")
+        rows.append({
+            "name": f"fig12_cpu_ratio/{ratio}",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": f"speedup={sp:.2f}x",
+            "speedup": sp,
+        })
+    return rows

@@ -1,0 +1,34 @@
+"""Fig. 1 / Fig. 9 — average JCT vs cluster load (FIFO, single-GPU trace,
+128 GPUs). Synergy-TUNE sustains higher load than GPU-proportional; at high
+load the paper reports up to 3.4x (and OPT within ~10% of TUNE)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import FAST, run_policies, speedup
+from repro.core.trace import TraceConfig, generate
+
+
+def run():
+    rows = []
+    loads = (6.0, 8.0, 10.0) if FAST else (4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0)
+    n_jobs = 900 if FAST else 2500
+    mon = (300, 400) if FAST else (600, 1000)
+    for load in loads:
+        jobs = generate(TraceConfig(n_jobs=n_jobs, split=(20, 70, 10),
+                                    arrival="poisson", jobs_per_hour=load,
+                                    multi_gpu=False, seed=42))
+        t0 = time.perf_counter()
+        sub = run_policies(jobs, 16, ["fifo"], ["proportional", "tune"],
+                           steady_skip=mon[0], steady_count=mon[1])
+        sp = speedup(sub, "fifo")
+        prop = next(r for r in sub if r["allocator"] == "proportional")
+        tune = next(r for r in sub if r["allocator"] == "tune")
+        rows.append({
+            "name": f"fig9_load/{load:.0f}jobs_hr",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": (f"prop={prop['avg_jct_h']:.1f}h tune={tune['avg_jct_h']:.1f}h "
+                        f"speedup={sp:.2f}x"),
+            "speedup": sp,
+        })
+    return rows

@@ -1,0 +1,49 @@
+"""Fig. 6 / Table 6 — Philly trace on a 512-GPU cluster (64 servers),
+split (20,70,10): avg JCT for SRTF/LAS/FIFO, per-job speedup distribution,
+and the short/long-job breakdown under SRTF."""
+from __future__ import annotations
+
+import copy
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, run_policies
+from repro.core.trace import philly_trace
+
+
+def run():
+    rows = []
+    n_jobs = 1600 if FAST else 8000
+    load = 42.0 if FAST else 64.0
+    jobs = philly_trace(n_jobs=n_jobs, split=(20, 70, 10), seed=7,
+                        jobs_per_hour=load)
+    policies = ["srtf"] if FAST else ["srtf", "las", "fifo"]
+    for pol in policies:
+        t0 = time.perf_counter()
+        sub = run_policies(jobs, 64, [pol], ["proportional", "tune"],
+                           steady_skip=500, steady_count=600)
+        prop = next(r for r in sub if r["allocator"] == "proportional")
+        tune = next(r for r in sub if r["allocator"] == "tune")
+        # per-job speedups (matched by job id)
+        pj = {j.job_id: j.jct() for j in prop["result"].jobs if j.jct()}
+        tj = {j.job_id: j.jct() for j in tune["result"].jobs if j.jct()}
+        sp = np.array([pj[i] / tj[i] for i in set(pj) & set(tj)])
+        # short/long split under this policy (short: JCT < 4h in baseline)
+        short = [i for i in set(pj) & set(tj) if pj[i] < 4 * 3600]
+        long_ = [i for i in set(pj) & set(tj) if pj[i] >= 4 * 3600]
+        s_sp = (np.mean([pj[i] for i in short]) / np.mean([tj[i] for i in short])
+                if short else float("nan"))
+        l_sp = (np.mean([pj[i] for i in long_]) / np.mean([tj[i] for i in long_])
+                if long_ else float("nan"))
+        rows.append({
+            "name": f"fig6_philly/{pol}",
+            "us_per_call": (time.perf_counter() - t0) * 1e6,
+            "derived": (f"prop={prop['avg_jct_h']:.1f}h tune={tune['avg_jct_h']:.1f}h "
+                        f"speedup={prop['avg_jct_h'] / tune['avg_jct_h']:.2f}x "
+                        f"max_job_speedup={sp.max():.1f}x "
+                        f"short={s_sp:.2f}x long={l_sp:.2f}x"),
+            "speedup": prop["avg_jct_h"] / tune["avg_jct_h"],
+            "max_job_speedup": float(sp.max()),
+        })
+    return rows

@@ -1,0 +1,31 @@
+"""Fig. 7 / Fig. 8 — LAS and SRTF on multi-GPU traces vs load (128 GPUs):
+avg JCT for proportional vs TUNE vs (paper) within-10%-of-OPT."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import FAST, run_policies, speedup
+from repro.core.trace import TraceConfig, generate
+
+
+def run():
+    rows = []
+    loads = (7.0,) if FAST else (4.0, 6.0, 8.0)
+    for pol in ("las", "srtf", "ftf"):
+        for load in loads:
+            jobs = generate(TraceConfig(n_jobs=700 if FAST else 1600,
+                                        split=(20, 70, 10), arrival="poisson",
+                                        jobs_per_hour=load, multi_gpu=True,
+                                        seed=11))
+            t0 = time.perf_counter()
+            sub = run_policies(jobs, 16, [pol], ["proportional", "tune"],
+                               steady_skip=250, steady_count=300)
+            sp = speedup(sub, pol)
+            p99_sp = speedup(sub, pol, metric="p99_jct_h")
+            rows.append({
+                "name": f"fig7_8/{pol}_{load:.0f}jobs_hr",
+                "us_per_call": (time.perf_counter() - t0) * 1e6,
+                "derived": f"avg_speedup={sp:.2f}x p99_speedup={p99_sp:.2f}x",
+                "speedup": sp,
+            })
+    return rows

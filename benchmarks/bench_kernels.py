@@ -1,0 +1,58 @@
+"""Substrate kernels — wall time of the Pallas kernels (interpret mode on
+CPU; compiled Mosaic on TPU) vs the pure-jnp references, plus allclose."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run():
+    rows = []
+    ks = jax.random.split(jax.random.key(0), 4)
+
+    b, s, hq, hkv, d = 1, 512, 8, 2, 64
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    t_k = _time(lambda *a: ops.flash_attention(*a, causal=True), q, k, v)
+    t_r = _time(lambda *a: ref.attention(*a, causal=True), q, k, v)
+    err = float(jnp.abs(ops.flash_attention(q, k, v, causal=True)
+                        - ref.attention(q, k, v, causal=True)).max())
+    rows.append({"name": "kernel/flash_attention", "us_per_call": t_k,
+                 "derived": f"ref_us={t_r:.0f} max_err={err:.2e}"})
+
+    b, s, h, p, n = 1, 256, 4, 64, 32
+    xdt = jax.random.normal(ks[0], (b, s, h, p))
+    a_log = -jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    B = jax.random.normal(ks[2], (b, s, h, n)) * 0.5
+    C = jax.random.normal(ks[3], (b, s, h, n)) * 0.5
+    t_k = _time(lambda *a: ops.ssd_scan(*a, chunk=64), xdt, a_log, B, C)
+    t_r = _time(ref.ssd, xdt, a_log, B, C)
+    err = float(jnp.abs(ops.ssd_scan(xdt, a_log, B, C, chunk=64)
+                        - ref.ssd(xdt, a_log, B, C)).max())
+    rows.append({"name": "kernel/ssd_scan", "us_per_call": t_k,
+                 "derived": f"ref_us={t_r:.0f} max_err={err:.2e}"})
+
+    g, c, kk, nn = 8, 128, 256, 128
+    x = jax.random.normal(ks[0], (g, c, kk))
+    w = jax.random.normal(ks[1], (g, kk, nn))
+    t_k = _time(ops.grouped_matmul, x, w)
+    t_r = _time(ref.grouped_matmul, x, w)
+    err = float(jnp.abs(ops.grouped_matmul(x, w) - ref.grouped_matmul(x, w)).max())
+    rows.append({"name": "kernel/grouped_matmul", "us_per_call": t_k,
+                 "derived": f"ref_us={t_r:.0f} max_err={err:.2e}"})
+    return rows

@@ -1,0 +1,54 @@
+"""§5.6 — Synergy-OPT vs Synergy-TUNE: per-round solve-time scaling with
+cluster size, and TUNE's throughput within ~10% of the ILP optimum."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST
+from repro.core import opt
+from repro.core.allocators import get_allocator
+from repro.core.cluster import Cluster
+from repro.core.policies import get_policy
+from repro.core.profiler import OptimisticProfiler
+from repro.core.trace import TraceConfig, generate
+
+
+def run():
+    rows = []
+    sizes = (4, 16) if FAST else (4, 16, 64)
+    prof = OptimisticProfiler()
+    for n_servers in sizes:
+        gaps, t_opt, t_tune = [], [], []
+        for seed in range(3):
+            jobs = generate(TraceConfig(n_jobs=n_servers * 14,
+                                        split=(30, 50, 20), arrival="static",
+                                        seed=seed))
+            for j in jobs:
+                prof.profile_job(j)
+            cluster = Cluster(n_servers)
+            run_set, free = [], cluster.total_gpus
+            for j in get_policy("fifo").order(jobs, 0):
+                if j.gpu_demand <= free:
+                    run_set.append(j)
+                    free -= j.gpu_demand
+            t0 = time.perf_counter()
+            res = opt.solve_ideal(run_set, cluster, integer=True,
+                                  time_limit=60.0)
+            t_opt.append(time.perf_counter() - t0)
+            t0 = time.perf_counter()
+            get_allocator("tune").schedule(Cluster(n_servers), run_set)
+            t_tune.append(time.perf_counter() - t0)
+            tput = sum(j.current_rate for j in run_set)
+            gaps.append(tput / max(res.throughput, 1e-9))
+        rows.append({
+            "name": f"opt_vs_tune/{n_servers * 8}gpus",
+            "us_per_call": float(np.mean(t_opt)) * 1e6,
+            "derived": (f"opt_solve={np.mean(t_opt) * 1000:.0f}ms "
+                        f"tune_solve={np.mean(t_tune) * 1000:.1f}ms "
+                        f"tune/opt_tput={np.mean(gaps) * 100:.0f}% "
+                        f"speedup={np.mean(t_opt) / np.mean(t_tune):.0f}x"),
+            "tune_over_opt": float(np.mean(gaps)),
+        })
+    return rows

@@ -1,0 +1,52 @@
+"""Shared helpers for the paper-figure benchmarks."""
+from __future__ import annotations
+
+import copy
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.simulator import simulate
+from repro.core.trace import TraceConfig, generate
+
+FAST = os.environ.get("BENCH_FULL", "") == ""     # default: fast mode
+
+
+def run_policies(jobs, n_servers, policies, allocators, *, spec=None,
+                 steady_skip=0, steady_count=0, round_seconds=300.0,
+                 max_hours=24_000.0) -> List[Dict]:
+    """Cross product of policies x allocators on deep-copied jobs."""
+    rows = []
+    for pol in policies:
+        for alloc in allocators:
+            t0 = time.perf_counter()
+            kw = dict(policy=pol, allocator=alloc,
+                      steady_skip=steady_skip, steady_count=steady_count,
+                      round_seconds=round_seconds, max_hours=max_hours)
+            if spec is not None:
+                kw["spec"] = spec
+            res = simulate(n_servers, copy.deepcopy(jobs), **kw)
+            rows.append({
+                "policy": pol, "allocator": alloc,
+                "avg_jct_h": res.avg_jct / 3600.0,
+                "p99_jct_h": res.p99_jct / 3600.0,
+                "makespan_h": res.makespan / 3600.0,
+                "rounds": res.rounds,
+                "wall_s": time.perf_counter() - t0,
+                "result": res,
+            })
+    return rows
+
+
+def speedup(rows, policy, base="proportional", other="tune",
+            metric="avg_jct_h") -> float:
+    b = next(r for r in rows if r["policy"] == policy and r["allocator"] == base)
+    o = next(r for r in rows if r["policy"] == policy and r["allocator"] == other)
+    return b[metric] / o[metric]
+
+
+def jct_cdf(result, skip=0, count=0) -> np.ndarray:
+    jobs = result.monitored(skip, count)
+    return np.sort([j.jct() / 3600.0 for j in jobs if j.jct() is not None])

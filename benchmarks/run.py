@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (one row per experiment) and writes
+the full records to experiments/bench_results.json. Default is a fast
+configuration (minutes); set BENCH_FULL=1 for paper-scale runs.
+
+    PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import traceback
+
+MODULES = [
+    "bench_profiling",        # Fig 5
+    "bench_fig1_load",        # Fig 1 / Fig 9
+    "bench_fig7_8_policies",  # Fig 7, 8
+    "bench_fig10_util",       # Fig 10
+    "bench_fig11_split",      # Fig 11
+    "bench_fig12_cpu_ratio",  # Fig 12
+    "bench_fig13_bigdata",    # Fig 13
+    "bench_fig6_philly",      # Fig 6 / Table 6
+    "bench_opt_vs_tune",      # section 5.6
+    "bench_kernels",          # substrate kernels
+    "bench_table5_cluster",   # Table 5 (live runtime; slowest — last)
+]
+
+
+def main() -> None:
+    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    records = []
+    print("name,us_per_call,derived")
+    t_start = time.time()
+    for mod_name in MODULES:
+        if filters and not any(f in mod_name for f in filters):
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            rows = mod.run()
+        except Exception:
+            print(f"{mod_name},0,ERROR")
+            traceback.print_exc()
+            continue
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.0f},\"{r['derived']}\"")
+            records.append({k: v for k, v in r.items() if k != "result"})
+        sys.stdout.flush()
+
+    os.makedirs("experiments", exist_ok=True)
+    with open("experiments/bench_results.json", "w") as f:
+        json.dump(records, f, indent=2, default=str)
+    print(f"# total wall: {time.time() - t_start:.0f}s; "
+          f"records -> experiments/bench_results.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+from repro.configs.base import ArchConfig, smoke_variant
+from repro.configs.registry import ARCH_IDS, get_config, list_archs
+from repro.configs.shapes import INPUT_SHAPES, InputShape
+
+__all__ = ["ArchConfig", "smoke_variant", "ARCH_IDS", "get_config",
+           "list_archs", "INPUT_SHAPES", "InputShape"]

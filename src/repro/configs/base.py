@@ -1,0 +1,197 @@
+"""Architecture configuration schema.
+
+Every assigned architecture is expressed as an ``ArchConfig``. The same schema
+drives model construction (``repro.models.api.build_model``), the dry-run
+lowering (``repro.launch.dryrun``), and the Synergy scheduler's workload
+classes (``sens_class`` maps an architecture onto the paper's image / language
+/ speech sensitivity families).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    # -- identity -----------------------------------------------------------
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    citation: str = ""
+
+    # -- transformer geometry ------------------------------------------------
+    n_layers: int = 0
+    d_model: int = 0
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 0
+    head_dim: int = 0                # 0 -> d_model // n_heads
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    pos_emb: str = "rope"            # rope | sinusoidal
+    rope_theta: float = 10000.0
+
+    # -- attention pattern ---------------------------------------------------
+    sliding_window: int = 0          # 0 = full attention
+    global_every: int = 0            # gemma3: every Nth layer is global (rest local)
+
+    # -- mixture of experts --------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.01
+
+    # -- state-space (mamba2 / SSD) ------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    ssm_groups: int = 1
+
+    # -- hybrid (zamba2) ------------------------------------------------------
+    shared_attn_every: int = 0       # shared attn block before every N ssm blocks
+
+    # -- encoder-decoder (whisper) --------------------------------------------
+    n_enc_layers: int = 0
+    enc_seq: int = 0                 # stub-frontend frame count
+
+    # -- vlm ------------------------------------------------------------------
+    n_patches: int = 0               # stub-frontend patch count (prefix of sequence)
+
+    # -- numerics -------------------------------------------------------------
+    dtype: str = "float32"           # activation dtype
+    param_dtype: str = "float32"
+    remat: str = "none"              # none | dots | full
+    use_pallas: bool = False         # route hot-spots through Pallas kernels
+    unroll: bool = False             # unroll layer loops (dry-run flop probes:
+                                     # XLA cost_analysis counts while bodies
+                                     # once, so probes compile unrolled)
+
+    # -- beyond-paper perf knobs (EXPERIMENTS.md §Perf) -----------------------
+    local_banded: bool = False       # banded (block-local) attention for
+                                     # sliding-window layers: O(S*2W) scores
+                                     # instead of O(S^2)
+    gqa_no_repeat: bool = False      # grouped GQA einsum without KV repeat
+                                     # (when kv heads divide the model axis)
+    pad_q_heads: int = 0             # pad Q heads to this count (zero-init
+                                     # extra wo rows) so heads shard cleanly
+    moe_gather_dispatch: bool = False  # MoE dispatch via int32 slot->token
+                                     # indices + local gather, instead of
+                                     # scatter-add of feature buffers (which
+                                     # XLA lowers to f32 partial-sum
+                                     # all-reduces over the expert axis)
+
+    @property
+    def n_heads_eff(self) -> int:
+        return self.pad_q_heads if self.pad_q_heads > self.n_heads else self.n_heads
+
+    # -- Synergy workload class (paper Fig. 2 families) -------------------------
+    sens_class: str = "language"     # image | language | speech
+
+    # ------------------------------------------------------------------------
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def n_ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim if self.ssm_headdim else 0
+
+    @property
+    def is_attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """Sub-quadratic archs that run the long_500k shape (see DESIGN.md)."""
+        return self.family in ("ssm", "hybrid") or (
+            self.family == "dense" and self.sliding_window > 0
+        )
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+    # Parameter count (for 6·N·D model flops and the throughput model). ------
+    def param_count(self, active_only: bool = False) -> int:
+        d, hd = self.d_model, self.resolved_head_dim
+        v = self.vocab_size
+        emb = v * d * (1 if self.tie_embeddings else 2)
+
+        def attn_params() -> int:
+            q = d * self.n_heads * hd + (self.n_heads * hd if self.qkv_bias else 0)
+            kv = 2 * (d * self.n_kv_heads * hd + (self.n_kv_heads * hd if self.qkv_bias else 0))
+            o = self.n_heads * hd * d
+            return q + kv + o
+
+        def mlp_params(ff: int) -> int:
+            return 3 * d * ff          # swiglu: gate + up + down
+
+        def moe_params() -> int:
+            router = d * self.n_experts
+            experts = self.n_experts if not active_only else self.top_k
+            return router + experts * mlp_params(self.d_ff)
+
+        def ssm_params() -> int:
+            di, st, g, h = self.d_inner, self.ssm_state, self.ssm_groups, self.n_ssm_heads
+            in_p = d * (2 * di + 2 * g * st + h)
+            conv = (di + 2 * g * st) * self.ssm_conv
+            return in_p + conv + h * 2 + di + di * d   # A,dt_bias,D,norm + out_proj
+
+        per_layer = 2 * d              # two norms
+        if self.family in ("dense", "vlm"):
+            per_layer += attn_params() + mlp_params(self.d_ff)
+            total = emb + self.n_layers * per_layer
+        elif self.family == "moe":
+            per_layer += attn_params() + moe_params()
+            total = emb + self.n_layers * per_layer
+        elif self.family == "ssm":
+            total = emb + self.n_layers * (d + ssm_params())
+        elif self.family == "hybrid":
+            shared = attn_params() + mlp_params(4 * d) + 2 * d
+            total = emb + self.n_layers * (d + ssm_params()) + shared
+        elif self.family == "encdec":
+            enc = self.n_enc_layers * (attn_params() + mlp_params(self.d_ff) + 2 * d)
+            dec = self.n_layers * (2 * attn_params() + mlp_params(self.d_ff) + 3 * d)
+            total = emb + enc + dec
+        else:
+            raise ValueError(self.family)
+        return int(total)
+
+
+# Reduced variant used by per-arch smoke tests: same family / same code paths,
+# laptop-scale dimensions (<=2 layers, d_model <= 512, <= 4 experts).
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    kw = dict(
+        n_layers=2,
+        d_model=256,
+        n_heads=4,
+        n_kv_heads=2 if cfg.n_kv_heads < cfg.n_heads else 4,
+        head_dim=64,
+        d_ff=512,
+        vocab_size=512,
+        dtype="float32",
+        param_dtype="float32",
+        remat="none",
+    )
+    if cfg.family == "moe":
+        kw.update(n_experts=4, top_k=2, d_ff=128)
+    if cfg.family in ("ssm", "hybrid"):
+        kw.update(ssm_state=16, ssm_headdim=32, ssm_chunk=32)
+    if cfg.family == "hybrid":
+        kw.update(shared_attn_every=2)
+    if cfg.family == "encdec":
+        kw.update(n_enc_layers=2, enc_seq=64)
+    if cfg.family == "vlm":
+        kw.update(n_patches=16)
+    if cfg.sliding_window:
+        kw.update(sliding_window=32)
+    return cfg.replace(**kw)

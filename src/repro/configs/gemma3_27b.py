@@ -1,0 +1,25 @@
+"""gemma3-27b [hf:google/gemma-3-1b-pt family] — dense, 5:1 local:global.
+
+62 layers; every 6th layer is global attention, the rest use a 1024-token
+sliding window — which is what makes long_500k decode tractable (local KV is
+window-bounded; global layers are O(L) per decoded token).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="gemma3-27b",
+    family="dense",
+    citation="hf:google/gemma-3-1b-pt",
+    n_layers=62,
+    d_model=5376,
+    n_heads=32,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262144,
+    rope_theta=1000000.0,
+    sliding_window=1024,
+    global_every=6,
+    tie_embeddings=True,
+    sens_class="language",
+)

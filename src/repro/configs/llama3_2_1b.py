@@ -1,0 +1,18 @@
+"""llama3.2-1b [hf:meta-llama/Llama-3.2-1B] — dense, GQA kv=8."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="llama3.2-1b",
+    family="dense",
+    citation="hf:meta-llama/Llama-3.2-1B",
+    n_layers=16,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=128256,
+    rope_theta=500000.0,
+    tie_embeddings=True,
+    sens_class="language",
+)

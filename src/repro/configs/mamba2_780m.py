@@ -1,0 +1,18 @@
+"""mamba2-780m [arXiv:2405.21060] — pure SSM (SSD), attention-free."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-780m",
+    family="ssm",
+    citation="arXiv:2405.21060",
+    n_layers=48,
+    d_model=1536,
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=256,
+    tie_embeddings=True,
+    sens_class="language",
+)

@@ -1,0 +1,19 @@
+"""olmoe-1b-7b [arXiv:2409.02060] — MoE, 64 experts top-8."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="olmoe-1b-7b",
+    family="moe",
+    citation="arXiv:2409.02060",
+    n_layers=16,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1024,              # per-expert FFN width
+    vocab_size=50304,
+    n_experts=64,
+    top_k=8,
+    rope_theta=10000.0,
+    sens_class="language",
+)

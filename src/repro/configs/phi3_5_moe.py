@@ -1,0 +1,19 @@
+"""phi3.5-moe-42b-a6.6b [hf:microsoft/Phi-3.5-MoE-instruct] — 16 experts top-2."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="phi3.5-moe-42b-a6.6b",
+    family="moe",
+    citation="hf:microsoft/Phi-3.5-MoE-instruct",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=6400,              # per-expert FFN width
+    vocab_size=32064,
+    n_experts=16,
+    top_k=2,
+    rope_theta=10000.0,
+    sens_class="language",
+)

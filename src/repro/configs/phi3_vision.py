@@ -1,0 +1,23 @@
+"""phi-3-vision-4.2b [hf:microsoft/Phi-3-vision-128k-instruct].
+
+phi3-mini backbone + CLIP vision encoder; the ViT+projector is a STUB —
+input_specs supplies precomputed patch embeddings occupying the sequence
+prefix (n_patches positions).
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="phi-3-vision-4.2b",
+    family="vlm",
+    citation="hf:microsoft/Phi-3-vision-128k-instruct",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=96,
+    d_ff=8192,
+    vocab_size=32064,
+    rope_theta=10000.0,
+    n_patches=576,
+    sens_class="image",
+)

@@ -1,0 +1,19 @@
+"""qwen2-0.5b [arXiv:2407.10671] — dense, GQA kv=2, QKV bias."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-0.5b",
+    family="dense",
+    citation="arXiv:2407.10671",
+    n_layers=24,
+    d_model=896,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151936,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    tie_embeddings=True,
+    sens_class="language",
+)

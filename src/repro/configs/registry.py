@@ -1,0 +1,37 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import importlib
+from typing import List
+
+from repro.configs.base import ArchConfig, smoke_variant
+
+_MODULES = {
+    "whisper-large-v3": "repro.configs.whisper_large_v3",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi3_5_moe",
+    "phi-3-vision-4.2b": "repro.configs.phi3_vision",
+    "qwen2-0.5b": "repro.configs.qwen2_0_5b",
+    "zamba2-7b": "repro.configs.zamba2_7b",
+    "qwen2-7b": "repro.configs.qwen2_7b",
+    "mamba2-780m": "repro.configs.mamba2_780m",
+    "gemma3-27b": "repro.configs.gemma3_27b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(arch_id: str, smoke: bool = False, **overrides) -> ArchConfig:
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {ARCH_IDS}")
+    cfg = importlib.import_module(_MODULES[arch_id]).CONFIG
+    if smoke:
+        cfg = smoke_variant(cfg)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+def list_archs() -> List[str]:
+    return list(ARCH_IDS)

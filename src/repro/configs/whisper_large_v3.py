@@ -1,0 +1,25 @@
+"""whisper-large-v3 [arXiv:2212.04356] — enc-dec audio; conv frontend stubbed.
+
+32 encoder + 32 decoder layers, d_model=1280, 20 heads (GQA kv=20, i.e. MHA),
+d_ff=5120, vocab=51866. The mel+conv frontend is a stub: input_specs supplies
+1500 precomputed frame embeddings.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="whisper-large-v3",
+    family="encdec",
+    citation="arXiv:2212.04356",
+    n_layers=32,            # decoder layers
+    n_enc_layers=32,
+    d_model=1280,
+    n_heads=20,
+    n_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51866,
+    qkv_bias=True,
+    pos_emb="sinusoidal",
+    enc_seq=1500,
+    sens_class="speech",
+)

@@ -1,0 +1,24 @@
+"""zamba2-7b [arXiv:2411.15242] — hybrid: Mamba2 backbone + shared attn block.
+
+81 Mamba2 blocks; a single shared attention(+MLP) block invoked before every
+6 blocks (13 invocations + 3 trailing mamba blocks). ssm_state=64.
+"""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="zamba2-7b",
+    family="hybrid",
+    citation="arXiv:2411.15242",
+    n_layers=81,            # mamba2 blocks
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,             # shared-block MLP width
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    shared_attn_every=6,
+    sens_class="language",
+)

@@ -1,0 +1,91 @@
+"""Scheduling policies (§2.2, §5.1): FIFO, SRTF, LAS, FTF (+ DRF for §5.7).
+
+A policy only ORDERS the queue; Synergy's mechanism (allocators.py) decides
+placement and auxiliary-resource amounts. This separation is the paper's
+point: Synergy augments any policy.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core.job import Job
+
+
+class Policy:
+    name = "policy"
+
+    def priority(self, job: Job, now: float) -> float:
+        raise NotImplementedError
+
+    def order(self, jobs: Sequence[Job], now: float) -> List[Job]:
+        return sorted(jobs, key=lambda j: (self.priority(j, now), j.arrival_time,
+                                           j.job_id))
+
+
+class FIFO(Policy):
+    name = "fifo"
+
+    def priority(self, job: Job, now: float) -> float:
+        return job.arrival_time
+
+
+class SRTF(Policy):
+    """Shortest Remaining Time First (remaining GPU-proportional work)."""
+    name = "srtf"
+
+    def priority(self, job: Job, now: float) -> float:
+        return job.remaining
+
+
+class LAS(Policy):
+    """Least Attained Service (Tiresias-style; GPU-seconds attained)."""
+    name = "las"
+
+    def priority(self, job: Job, now: float) -> float:
+        return job.attained_service
+
+
+class FTF(Policy):
+    """Finish-Time Fairness (Themis-style).
+
+    rho = T_projected / T_ideal: projected completion (elapsed + remaining at
+    proportional rate) over the job's ideal isolated runtime. Jobs with the
+    largest rho (most unfairly treated) go first -> sort by -rho.
+    """
+    name = "ftf"
+
+    def priority(self, job: Job, now: float) -> float:
+        elapsed = now - job.arrival_time
+        projected = elapsed + job.remaining
+        ideal = max(job.duration, 1e-9)
+        rho = projected / ideal
+        return -rho
+
+
+class DRF(Policy):
+    """Dominant Resource Fairness (§5.7): smallest dominant share first.
+
+    The dominant share uses the job's *static* demand vector (DRF assumes
+    demands are fixed — precisely what Synergy relaxes).
+    """
+    name = "drf"
+
+    def __init__(self, total_gpus: float, total_cpus: float, total_mem: float):
+        self.totals = (total_gpus, total_cpus, total_mem)
+
+    def priority(self, job: Job, now: float) -> float:
+        g, c, m = job.gpu_demand, job.demand_cpu, job.demand_mem
+        shares = (g / self.totals[0], c / self.totals[1], m / self.totals[2])
+        # attained-weighted: DRF grants the next task to the user with the
+        # least dominant share attained; approximate with service-weighted share
+        return max(shares) * (1.0 + job.attained_service / 3600.0)
+
+
+POLICIES = {p.name: p for p in (FIFO(), SRTF(), LAS(), FTF())}
+
+
+def get_policy(name: str, cluster=None) -> Policy:
+    if name == "drf":
+        assert cluster is not None
+        return DRF(cluster.total_gpus, cluster.total_cpus, cluster.total_mem)
+    return {"fifo": FIFO, "srtf": SRTF, "las": LAS, "ftf": FTF}[name]()

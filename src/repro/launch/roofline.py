@@ -1,0 +1,62 @@
+"""Roofline report generator: reads experiments/dryrun.jsonl, emits the
+per-(arch x shape) table for EXPERIMENTS.md §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.roofline [--jsonl experiments/dryrun.jsonl]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from collections import OrderedDict
+
+
+def load(jsonl: str):
+    recs = {}
+    with open(jsonl) as f:
+        for line in f:
+            r = json.loads(line)
+            key = (r["arch"], r["shape"], r["mesh"], r.get("tag"))
+            recs[key] = r           # last write wins (re-runs supersede)
+    return recs
+
+
+def fmt_row(r) -> str:
+    c, m, k = r["compute_s"], r["memory_s"], r["collective_s"]
+    dom = r["bottleneck"]
+    ratio = r.get("useful_flop_ratio")
+    mem = r.get("memory_stats") or {}
+    peak = mem.get("peak_bytes") or mem.get("bytes_per_device") or 0
+    args = r.get("args_gib_per_device", "")
+    return (f"| {r['arch']} | {r['shape']} | {c * 1e3:.1f} | {m * 1e3:.1f} | "
+            f"{k * 1e3:.1f} | **{dom}** | {ratio:.2f} | "
+            f"{(r['flops_per_chip'] or 0) / 1e12:.2f} | {args} |")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jsonl", default="experiments/dryrun.jsonl")
+    ap.add_argument("--mesh", default="pod")
+    args = ap.parse_args()
+    recs = load(args.jsonl)
+
+    print("| arch | shape | compute (ms) | memory (ms) | collective (ms) | "
+          "bottleneck | useful-FLOP ratio | TFLOP/chip | args GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    rows = [r for (a, s, m, t), r in sorted(recs.items())
+            if m == args.mesh and t is None]
+    for r in rows:
+        print(fmt_row(r))
+
+    doms = {}
+    for r in rows:
+        doms[r["bottleneck"]] = doms.get(r["bottleneck"], 0) + 1
+    print(f"\n{len(rows)} combos; bottleneck counts: {doms}")
+
+    # multipod pass/fail summary
+    mp = [r for (a, s, m, t), r in sorted(recs.items())
+          if m == "multipod" and t is None]
+    print(f"multipod (2x16x16 = 512 chips) lowered+compiled: {len(mp)} combos")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,95 @@
+"""Drive the full dry-run sweep: every (arch x shape x mesh) combination.
+
+Each combo runs in its own subprocess (fresh XLA, isolation against compile
+failures) and appends a JSON line to the output file. Single-pod runs carry
+the unrolled flop probes (roofline terms); multi-pod runs are the pass/fail
+lowering proof (+ memory analysis) without probes.
+
+    PYTHONPATH=src python -m repro.launch.run_all_dryruns \
+        --out experiments/dryrun.jsonl [--mesh pod|multipod|both]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+
+SKIPS = {}  # (arch, shape) -> reason, filled below
+
+for _arch in ARCH_IDS:
+    _cfg = get_config(_arch)
+    if not _cfg.supports_long_decode:
+        SKIPS[(_arch, "long_500k")] = (
+            "full-attention arch: long_500k requires sub-quadratic attention "
+            "(DESIGN.md skip note)")
+
+
+def combos(mesh_opt: str):
+    meshes = ["pod", "multipod"] if mesh_opt == "both" else [mesh_opt]
+    for arch in ARCH_IDS:
+        for shape in INPUT_SHAPES:
+            if (arch, shape) in SKIPS:
+                continue
+            for mesh in meshes:
+                yield arch, shape, mesh
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun.jsonl")
+    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--timeout", type=float, default=3600.0)
+    ap.add_argument("--resume", action="store_true",
+                    help="skip combos already present in --out")
+    args = ap.parse_args()
+
+    done = set()
+    if args.resume and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"]))
+                except json.JSONDecodeError:
+                    pass
+
+    todo = [c for c in combos(args.mesh) if c not in done]
+    print(f"{len(todo)} combos to run "
+          f"({len(SKIPS)} documented skips: {sorted(set(a for a, _ in SKIPS))})",
+          flush=True)
+    failures = []
+    for i, (arch, shape, mesh) in enumerate(todo):
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", arch, "--shape", shape, "--mesh", mesh,
+               "--out", args.out]
+        if mesh == "multipod":
+            cmd.append("--no-probe")
+        t0 = time.time()
+        print(f"[{i + 1}/{len(todo)}] {arch} {shape} {mesh} ...",
+              end=" ", flush=True)
+        try:
+            r = subprocess.run(cmd, capture_output=True, text=True,
+                               timeout=args.timeout)
+            if r.returncode != 0:
+                failures.append((arch, shape, mesh, r.stderr[-2000:]))
+                print(f"FAIL ({time.time() - t0:.0f}s)", flush=True)
+            else:
+                print(f"ok ({time.time() - t0:.0f}s)", flush=True)
+        except subprocess.TimeoutExpired:
+            failures.append((arch, shape, mesh, "timeout"))
+            print("TIMEOUT", flush=True)
+
+    print(f"\ndone: {len(todo) - len(failures)} ok, {len(failures)} failed")
+    for arch, shape, mesh, err in failures:
+        print(f"--- FAIL {arch} {shape} {mesh}\n{err[:800]}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Unified model API.
+
+``build_model(cfg)`` returns a ``Model`` facade with the same five entry
+points for every architecture family:
+
+    init(rng) -> params
+    loss(params, batch) -> scalar           (training objective)
+    forward(params, batch) -> logits        (prefill / full-sequence)
+    init_cache(batch, max_len) -> cache
+    decode_step(params, cache, tokens, pos) -> (logits, cache)
+
+``input_specs(cfg, shape, mode)`` produces ``jax.ShapeDtypeStruct`` stand-ins
+for every input of the corresponding step — weak-type-correct, shardable, and
+allocation-free — which is what the multi-pod dry-run lowers against.
+``make_batch`` materializes the same structure with real (random) arrays for
+smoke tests and the live runtime.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import encdec, hybrid, mamba2, moe, transformer
+
+_FAMILY_MODULES = {
+    "dense": transformer,
+    "vlm": transformer,
+    "moe": moe,
+    "ssm": mamba2,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    forward: Callable
+    init_cache: Callable
+    decode_step: Callable
+    module: Any
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+
+    def init(rng):
+        return mod.init_params(cfg, rng)
+
+    def loss(params, batch):
+        return mod.loss_fn(cfg, params, batch)
+
+    def forward(params, batch):
+        if cfg.family == "encdec":
+            return mod.forward(cfg, params, batch["tokens"], batch["frames"])
+        if cfg.family == "vlm":
+            return mod.forward(cfg, params, batch["tokens"],
+                               patch_embeds=batch.get("patch_embeds"))
+        return mod.forward(cfg, params, batch["tokens"])
+
+    def init_cache(batch, max_len, dtype=None):
+        return mod.init_cache(cfg, batch, max_len, dtype)
+
+    def decode_step(params, cache, tokens, pos):
+        return mod.decode_step(cfg, params, cache, tokens, pos)
+
+    return Model(cfg=cfg, init=init, loss=loss, forward=forward,
+                 init_cache=init_cache, decode_step=decode_step, module=mod)
+
+
+# ---------------------------------------------------------------------------
+# input specs / batches
+# ---------------------------------------------------------------------------
+def _extras_struct(cfg: ArchConfig, batch: int, dtype) -> Dict[str, Any]:
+    extras = {}
+    if cfg.family == "encdec":
+        extras["frames"] = jax.ShapeDtypeStruct(
+            (batch, cfg.enc_seq, cfg.d_model), dtype)
+    if cfg.family == "vlm":
+        extras["patch_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.d_model), dtype)
+    return extras
+
+
+def input_specs(cfg: ArchConfig, batch: int, seq_len: int,
+                mode: str = "train") -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the given step's data inputs.
+
+    mode: 'train' (tokens+labels), 'prefill' (tokens), 'decode'
+    (single token; the KV/state cache is produced via ``cache_specs``).
+    """
+    i32 = jnp.int32
+    dtype = jnp.dtype(cfg.dtype)
+    if mode == "train":
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((batch, seq_len), i32),
+            "labels": jax.ShapeDtypeStruct((batch, seq_len), i32),
+        }
+        specs.update(_extras_struct(cfg, batch, dtype))
+        return specs
+    if mode == "prefill":
+        specs = {"tokens": jax.ShapeDtypeStruct((batch, seq_len), i32)}
+        specs.update(_extras_struct(cfg, batch, dtype))
+        return specs
+    if mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((batch, 1), i32)}
+    raise ValueError(mode)
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
+    """ShapeDtypeStructs for the decode cache (via eval_shape — no alloc)."""
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def params_specs(cfg: ArchConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def make_batch(cfg: ArchConfig, batch: int, seq_len: int, rng,
+               mode: str = "train") -> Dict[str, Any]:
+    """Materialize a random batch matching ``input_specs``."""
+    specs = input_specs(cfg, batch, seq_len, mode)
+    out = {}
+    for name, s in specs.items():
+        rng, k = jax.random.split(rng)
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            out[name] = jax.random.randint(k, s.shape, 0, cfg.vocab_size,
+                                           dtype=s.dtype)
+        else:
+            out[name] = jax.random.normal(k, s.shape, dtype=s.dtype) * 0.02
+    return out

@@ -1,0 +1,142 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block
+(arXiv:2411.15242).
+
+n_layers counts Mamba2 blocks. A single attention(+MLP) block — one set of
+weights — is invoked before every ``shared_attn_every`` Mamba2 blocks. The
+structure is compiled as: scan over G = n_layers // every "super-blocks"
+(shared attn + `every` scanned mamba blocks), plus a trailing scanned stack
+for the remainder. Each shared-attention *invocation* has its own KV cache.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import transformer as T
+
+
+def _split(cfg):
+    every = cfg.shared_attn_every
+    groups = cfg.n_layers // every if every else 0
+    trailing = cfg.n_layers - groups * every
+    return every, groups, trailing
+
+
+# ---------------------------------------------------------------------------
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    every, groups, trailing = _split(cfg)
+    k_emb, k_shared, k_g, k_t = jax.random.split(key, 4)
+
+    gkeys = jax.random.split(k_g, max(groups * every, 1))[: groups * every]
+    tkeys = jax.random.split(k_t, max(trailing, 1))[:trailing]
+
+    params = {
+        "emb": L.init_embeddings(k_emb, cfg, dtype),
+        "shared": T.init_layer(k_shared, cfg, dtype),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+    if groups:
+        stacked = jax.vmap(lambda k: M.init_block(k, cfg, dtype))(gkeys)
+        params["groups"] = jax.tree_util.tree_map(
+            lambda a: a.reshape(groups, every, *a.shape[1:]), stacked)
+    if trailing:
+        params["trailing"] = jax.vmap(lambda k: M.init_block(k, cfg, dtype))(tkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+def _mamba_layer(cfg, p, x):
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    x = x + M.block_fwd(cfg, p, h)
+    return shard(x, "batch", None, None), None
+
+
+def forward(cfg, params, tokens):
+    x = L.embed(params["emb"], cfg, tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    every, groups, trailing = _split(cfg)
+    w0 = jnp.int32(0)
+
+    def super_block(x, gp):
+        # shared attention block (closed-over weights — identical every call)
+        x, _ = T._layer(cfg, params["shared"], x, positions, w0)
+        # `every` mamba blocks
+        x, _ = L.scan_layers(cfg, lambda c, p: _mamba_layer(cfg, p, c), x, gp)
+        return x, None
+
+    if cfg.remat != "none":
+        super_block = jax.checkpoint(super_block)
+
+    if groups:
+        x, _ = L.scan_layers(cfg, super_block, x, params["groups"])
+    if trailing:
+        x, _ = L.scan_layers(cfg, lambda c, p: _mamba_layer(cfg, p, c), x,
+                            params["trailing"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return L.unembed(params["emb"], cfg, x)
+
+
+def loss_fn(cfg, params, batch):
+    logits = forward(cfg, params, batch["tokens"])
+    return L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+# ---------------------------------------------------------------------------
+def init_cache(cfg, batch: int, max_len: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    every, groups, trailing = _split(cfg)
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    di, g, n, h, p, conv_ch = M._dims(cfg)
+    cache = {
+        "attn_k": jnp.zeros((groups, batch, max_len, nkv, hd), dtype),
+        "attn_v": jnp.zeros((groups, batch, max_len, nkv, hd), dtype),
+        "gconv": jnp.zeros((groups, every, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "gssm": jnp.zeros((groups, every, batch, h, n, p), jnp.float32),
+        "tconv": jnp.zeros((trailing, batch, cfg.ssm_conv - 1, conv_ch), dtype),
+        "tssm": jnp.zeros((trailing, batch, h, n, p), jnp.float32),
+    }
+    return cache
+
+
+def _mamba_decode(cfg, x, scanned):
+    p, conv_s, ssm_s = scanned
+    h = L.rmsnorm(x, p["norm"], cfg.norm_eps)
+    out, nconv, nssm = M.block_decode(cfg, p, h, conv_s, ssm_s)
+    return x + out, (nconv, nssm)
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    x = L.embed(params["emb"], cfg, tokens)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    every, groups, trailing = _split(cfg)
+    w0 = jnp.int32(0)
+
+    def super_block(x, scanned):
+        gp, ck, cv, gconv, gssm = scanned
+        x, new_kv = T._layer(cfg, params["shared"], x, positions, w0,
+                             kv_cache=(ck, cv), cache_pos=pos)
+        x, (nconv, nssm) = L.scan_layers(
+            cfg, lambda c, s: _mamba_decode(cfg, c, s), x, (gp, gconv, gssm))
+        return x, (new_kv[0], new_kv[1], nconv, nssm)
+
+    new = dict(cache)
+    if groups:
+        x, (nk, nv, ngconv, ngssm) = L.scan_layers(
+            cfg, super_block, x,
+            (params["groups"], cache["attn_k"], cache["attn_v"],
+             cache["gconv"], cache["gssm"]))
+        new.update(attn_k=nk, attn_v=nv, gconv=ngconv, gssm=ngssm)
+    if trailing:
+        x, (ntconv, ntssm) = L.scan_layers(
+            cfg, lambda c, s: _mamba_decode(cfg, c, s), x,
+            (params["trailing"], cache["tconv"], cache["tssm"]))
+        new.update(tconv=ntconv, tssm=ntssm)
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits, new

@@ -1,0 +1,329 @@
+"""Core layer library: GQA attention (RoPE / sinusoidal, sliding window, QKV
+bias), SwiGLU MLP, RMSNorm / LayerNorm, embeddings.
+
+All layers are pure functions over parameter dicts; initialization functions
+return plain dict pytrees so layers can be stacked (``jax.lax.scan`` over a
+leading layer axis) without framework machinery.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+
+
+def scan_layers(cfg, body, carry, xs):
+    """lax.scan over stacked layers, or an unrolled Python loop when
+    ``cfg.unroll`` (used by the dry-run's flop probes — XLA cost_analysis
+    counts while-loop bodies exactly once, so probes must unroll)."""
+    if not cfg.unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    outs = []
+    for i in range(n):
+        sl = jax.tree_util.tree_map(lambda a: a[i], xs)
+        carry, out = body(carry, sl)
+        outs.append(out)
+    if all(o is None for o in outs):
+        return carry, None
+    stacked = jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *outs)
+    return carry, stacked
+
+
+def _init_dense(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm(x, weight, eps: float):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def init_rmsnorm(d: int, dtype) -> jax.Array:
+    return jnp.zeros((d,), dtype)          # stored as (1 + w) offset form
+
+
+# ---------------------------------------------------------------------------
+# Positional embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: [B, S, H, D]; positions: [B, S] (int)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                                 # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs    # [B, S, D/2]
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(max_len: int, d: int) -> jax.Array:
+    pos = jnp.arange(max_len, dtype=jnp.float32)[:, None]
+    div = jnp.exp(jnp.arange(0, d, 2, dtype=jnp.float32) * (-math.log(10000.0) / d))
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+def init_attention(key, cfg, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nh, nkv = cfg.n_heads, cfg.n_kv_heads
+    nhe = cfg.n_heads_eff
+    ks = jax.random.split(key, 4)
+    wq = _init_dense(ks[0], (d, nh * hd), dtype)
+    wo = _init_dense(ks[3], (nh * hd, d), dtype)
+    if nhe > nh:
+        # Head padding (perf knob): extra Q heads whose wo rows are zero, so
+        # the function is unchanged at init while heads shard evenly. Padding
+        # must go INSIDE each KV group (head h maps to kv h // g), so pad the
+        # per-group head count g -> g_new and keep groups contiguous.
+        assert nh % nkv == 0 and nhe % nkv == 0, (nh, nhe, nkv)
+        g_old, g_new = nh // nkv, nhe // nkv
+        wq4 = wq.reshape(d, nkv, g_old, hd)
+        wq4 = jnp.pad(wq4, ((0, 0), (0, 0), (0, g_new - g_old), (0, 0)))
+        wq = wq4.reshape(d, nhe * hd)
+        wo4 = wo.reshape(nkv, g_old, hd, d)
+        wo4 = jnp.pad(wo4, ((0, 0), (0, g_new - g_old), (0, 0), (0, 0)))
+        wo = wo4.reshape(nhe * hd, d)
+    p = {
+        "wq": wq,
+        "wk": _init_dense(ks[1], (d, nkv * hd), dtype),
+        "wv": _init_dense(ks[2], (d, nkv * hd), dtype),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nhe * hd,), dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), dtype)
+    return p
+
+
+def _qkv(p, cfg, x):
+    from repro.dist.sharding import attention_scheme, current_rules, shard_spec
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads_eff, cfg.n_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, nh, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    # Constrain IMMEDIATELY after the head reshape: downstream elementwise ops
+    # (RoPE) must run on the final layout, or SPMD inserts replicate-reshard
+    # pairs ("involuntary full rematerialization").
+    scheme = attention_scheme(b, s, nh, s)
+    rules = current_rules()
+    if scheme is not None:
+        q = shard_spec(q, scheme["q"])
+        kv_spec = scheme["kv"]
+        # pre-repeat KV: drop the head axis if nkv is not divisible
+        parts = list(kv_spec)
+        if parts[2] is not None and nkv % rules.axis_size(parts[2]) != 0:
+            parts[2] = None
+        k = shard_spec(k, jax.sharding.PartitionSpec(*parts))
+        v = shard_spec(v, jax.sharding.PartitionSpec(*parts))
+    return q, k, v
+
+
+def attention_weights_mask(q_pos, k_pos, *, causal: bool,
+                           window: int = 0):
+    """Boolean mask [.., Sq, Sk]: True = attend."""
+    mask = jnp.ones(q_pos.shape[-1:] + k_pos.shape[-1:], bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    return mask
+
+
+def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
+        window: int = 0, no_repeat: bool = False):
+    """Grouped-query attention core.
+
+    q: [B, Sq, Hq, D], k/v: [B, Sk, Hkv, D], mask broadcastable to [Sq, Sk].
+
+    KV heads are repeated to the full head count before the score einsum so
+    the head dimension shards cleanly over the 'model' mesh axis (GQA head
+    counts rarely divide it). The sharding scheme (heads / extra-batch /
+    q-seq) is chosen per shape — see dist.sharding.attention_scheme.
+    """
+    from repro.dist.sharding import attention_scheme, shard_spec
+
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    if use_pallas:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=causal, window=window)
+    g = hq // hkv
+    no_repeat = no_repeat and g > 1
+    if g > 1 and not no_repeat:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    scheme = attention_scheme(b, sq, hkv if no_repeat else hq, k.shape[1])
+    if scheme is not None:
+        k = shard_spec(k, scheme["kv"])
+        v = shard_spec(v, scheme["kv"])
+    scale = 1.0 / math.sqrt(d)
+    if no_repeat:
+        # grouped einsum: KV stays at hkv heads (sharded over 'model'), no
+        # repeat materialization/reshard of the cache (decode perf knob).
+        qg = q.reshape(b, sq, hkv, g, d)
+        if scheme is not None:
+            qs = scheme["q"]
+            qg = shard_spec(qg, jax.sharding.PartitionSpec(
+                qs[0], qs[1], qs[2], None, None))
+        logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+        if mask is not None:
+            m5 = mask if mask.ndim >= 3 else mask[None]
+            logits = jnp.where(m5, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+        out = out.reshape(b, sq, hq, d)
+        if scheme is not None:
+            out = shard_spec(out, scheme["q"])
+        return out
+    if scheme is not None:
+        q = shard_spec(q, scheme["q"])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if scheme is not None:
+        logits = shard_spec(logits, scheme["logits"])
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    if scheme is not None:
+        out = shard_spec(out, scheme["q"])
+    return out
+
+
+def attention(p, cfg, x, positions, *, causal: bool = True,
+              window: int = 0, kv_cache=None, cache_pos=None,
+              cross_kv=None):
+    """Full attention layer.
+
+    Modes:
+      * training / prefill: ``kv_cache is None`` — attend over x itself.
+      * decode: ``kv_cache=(k, v)`` with static length S; the current token's
+        k/v is written at ``cache_pos`` and attention spans the cache.
+      * cross attention: ``cross_kv=(k, v)`` precomputed from encoder output.
+    Returns (out, new_kv_cache_or_None).
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x)
+    new_cache = None
+
+    if cross_kv is not None:
+        k, v = cross_kv
+        q = q if cfg.pos_emb != "rope" else q
+        mask = None
+    elif kv_cache is not None:
+        ck, cv = kv_cache
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        new_cache = (ck, cv)
+        k, v = ck, cv
+        k_pos = jnp.arange(k.shape[1])
+        valid = k_pos <= cache_pos
+        if window:
+            valid &= k_pos > cache_pos - window
+        mask = valid[None, :]                       # [1, Sk]
+        k = shard(k, "batch", "kv_seq", None, None)
+        v = shard(v, "batch", "kv_seq", None, None)
+    else:
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        q_pos = jnp.arange(s)
+        mask = attention_weights_mask(q_pos, q_pos, causal=causal, window=window)
+        new_cache = (k, v)          # post-rope k/v, used by prefill to seed a cache
+
+    use_pl = cfg.use_pallas and kv_cache is None and cross_kv is None and causal
+    out = mha(q, k, v, None if use_pl else mask, use_pallas=use_pl,
+              causal=causal, window=window, no_repeat=cfg.gqa_no_repeat)
+    out = out.reshape(b, s, -1) @ p["wo"]
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+def init_mlp(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": _init_dense(ks[0], (d, d_ff), dtype),
+        "w_up": _init_dense(ks[1], (d, d_ff), dtype),
+        "w_down": _init_dense(ks[2], (d_ff, d), dtype),
+    }
+
+
+def mlp(p, x):
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, "batch", None, "ffn")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings / unembedding
+# ---------------------------------------------------------------------------
+def init_embeddings(key, cfg, dtype) -> dict:
+    ks = jax.random.split(key, 2)
+    # Tied embeddings use 1/sqrt(d) init (+ sqrt(d) input scaling, gemma-style)
+    # so that tied logits come out unit-scale.
+    emb_scale = cfg.d_model ** -0.5 if cfg.tie_embeddings else 1.0
+    p = {"tok_emb": _init_dense(ks[0], (cfg.vocab_size, cfg.d_model), dtype,
+                                scale=emb_scale)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = _init_dense(ks[1], (cfg.d_model, cfg.vocab_size), dtype)
+    return p
+
+
+def embed(p, cfg, tokens):
+    x = jnp.take(p["tok_emb"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        x = x * math.sqrt(cfg.d_model)
+    return shard(x, "batch", None, None)
+
+
+def unembed(p, cfg, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["tok_emb"].T
+    else:
+        logits = x @ p["lm_head"]
+    return shard(logits, "batch", None, "vocab")
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean next-token cross entropy in f32. labels: int [B, S]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        mask = mask.astype(jnp.float32)
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

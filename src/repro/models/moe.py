@@ -1,0 +1,186 @@
+"""Mixture-of-Experts decoder (OLMoE 64e/top-8, Phi-3.5-MoE 16e/top-2).
+
+Token-choice top-k routing with capacity-bounded gather/scatter dispatch:
+the dispatch path uses integer gather/scatter (NOT one-hot einsums) so the
+compiled HLO FLOPs stay close to the *active* FLOPs — this keeps the roofline
+MODEL_FLOPS / HLO_FLOPs ratio honest. Expert FFNs run as a batched GEMM over
+the expert axis ([E, C, D] x [E, D, F]) which shards cleanly over the 'model'
+mesh axis (expert parallelism; XLA inserts the all-to-all at the sharding
+boundary between token-sharded and expert-sharded layouts).
+
+The Pallas ``grouped_matmul`` kernel is the TPU hot-spot implementation of the
+same contraction (see repro/kernels/grouped_matmul.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.models import layers as L
+from repro.models import transformer as T
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_moe_layer(key, cfg, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "attn": L.init_attention(k1, cfg, dtype),
+        "router": L._init_dense(k2, (d, e), dtype),
+        "we_gate_up": L._init_dense(k3, (e, d, 2 * f), dtype),
+        "we_down": L._init_dense(k4, (e, f, d), dtype),
+        "norm1": L.init_rmsnorm(d, dtype),
+        "norm2": L.init_rmsnorm(d, dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.param_dtype)
+    k_emb, k_layers = jax.random.split(key)
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    return {
+        "emb": L.init_embeddings(k_emb, cfg, dtype),
+        "layers": jax.vmap(lambda k: init_moe_layer(k, cfg, dtype))(layer_keys),
+        "final_norm": L.init_rmsnorm(cfg.d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# MoE FFN
+# ---------------------------------------------------------------------------
+def capacity(cfg, n_tokens: int) -> int:
+    c = int(n_tokens * cfg.top_k * cfg.capacity_factor / cfg.n_experts)
+    return max(8, -(-c // 8) * 8)          # round up to 8
+
+
+def moe_ffn(cfg, p, x):
+    """x: [B, S, D] -> ([B, S, D], aux_loss).
+
+    Dispatch is computed independently per batch row (vmap) so the dispatch
+    buffers are [B, E, C, D]: batch shards over 'data', experts over 'model'.
+    """
+    b, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = capacity(cfg, s)
+
+    logits = (x @ p["router"]).astype(jnp.float32)               # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)                       # [B, S, K]
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)       # renormalize
+
+    # Load-balance auxiliary loss (Switch-style): E * sum(frac_e * mean_prob_e)
+    onehot = jax.nn.one_hot(top_e, e, dtype=jnp.float32)         # [B, S, K, E]
+    frac_tokens = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))  # [E]
+    mean_prob = jnp.mean(probs, axis=(0, 1))                     # [E]
+    aux = e * jnp.sum(frac_tokens / k * mean_prob)
+
+    def dispatch_row(xt, row_e, row_p):
+        """xt: [S, D]; row_e/row_p: [S, K] -> ([E, C, D], combine meta)."""
+        flat_e = row_e.reshape(-1)                               # [S*K]
+        flat_p = row_p.reshape(-1)
+        flat_tok = jnp.repeat(jnp.arange(s), k)
+        one = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        pos_in_e = jnp.cumsum(one, axis=0)[jnp.arange(s * k), flat_e] - 1
+        keep = pos_in_e < cap
+        safe_pos = jnp.where(keep, pos_in_e, cap - 1)
+        if cfg.moe_gather_dispatch:
+            # Scatter only int32 slot->token indices (E*C ints), then gather
+            # features locally: avoids XLA's f32 partial-sum all-reduce of
+            # the whole [E, C, D] buffer over the expert-sharded axis.
+            slot_tok = jnp.full((e, cap), -1, jnp.int32)
+            slot_tok = slot_tok.at[flat_e, safe_pos].max(
+                jnp.where(keep, flat_tok, -1).astype(jnp.int32))
+            buf = jnp.where(slot_tok[..., None] >= 0,
+                            jnp.take(xt, jnp.maximum(slot_tok, 0), axis=0),
+                            jnp.zeros((), xt.dtype))
+        else:
+            buf = jnp.zeros((e, cap, d), xt.dtype)
+            buf = buf.at[flat_e, safe_pos].add(
+                jnp.where(keep[:, None], xt[flat_tok], 0.0))
+        return buf, (flat_e, safe_pos, flat_tok,
+                     jnp.where(keep, flat_p, 0.0))
+
+    buf, meta = jax.vmap(dispatch_row)(x, top_e, top_p)          # [B, E, C, D]
+    buf = shard(buf, "batch", "experts", None, None)
+
+    # expert computation: batched swiglu over the expert axis
+    gu = jnp.einsum("becd,edf->becf", buf, p["we_gate_up"])
+    g, u = jnp.split(gu, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("becf,efd->becd", h, p["we_down"])
+    out_buf = shard(out_buf, "batch", "experts", None, None)
+
+    def combine_row(out_b, m):
+        flat_e, safe_pos, flat_tok, w = m
+        y = out_b[flat_e, safe_pos] * w[:, None].astype(out_b.dtype)
+        return jax.ops.segment_sum(y, flat_tok, num_segments=s)
+
+    y = jax.vmap(combine_row)(out_buf, meta)                     # [B, S, D]
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# forward / loss / decode
+# ---------------------------------------------------------------------------
+def _layer(cfg, p, x, positions, kv_cache=None, cache_pos=None):
+    h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+    attn_out, new_cache = L.attention(p["attn"], cfg, h, positions,
+                                      kv_cache=kv_cache, cache_pos=cache_pos)
+    x = x + attn_out
+    h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+    ffn_out, aux = moe_ffn(cfg, p, h)
+    x = x + ffn_out
+    return shard(x, "batch", None, None), new_cache, aux
+
+
+def forward(cfg, params, tokens, return_aux=False):
+    x = L.embed(params["emb"], cfg, tokens)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    def body(carry, p):
+        x, aux_sum = carry
+        x, kv, aux = _layer(cfg, p, x, positions)
+        return (x, aux_sum + aux), kv
+
+    if cfg.remat != "none":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat == "dots" else
+                  jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+
+    (x, aux_sum), _ = L.scan_layers(cfg, body, (x, jnp.float32(0.0)), params["layers"])
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    if return_aux:
+        return logits, aux_sum / cfg.n_layers
+    return logits
+
+
+def loss_fn(cfg, params, batch):
+    logits, aux = forward(cfg, params, batch["tokens"], return_aux=True)
+    ce = L.cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+    return ce + cfg.router_aux_coef * aux
+
+
+init_cache = T.init_cache
+
+
+def decode_step(cfg, params, cache, tokens, pos):
+    x = L.embed(params["emb"], cfg, tokens)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), pos, jnp.int32)
+
+    def body(x, scanned):
+        p, ck, cv = scanned
+        x, new_kv, _aux = _layer(cfg, p, x, positions, kv_cache=(ck, cv),
+                                 cache_pos=pos)
+        return x, new_kv
+
+    x, (new_k, new_v) = L.scan_layers(cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits, {"k": new_k, "v": new_v}

@@ -1,0 +1,119 @@
+"""Batched serving engine: prefill + greedy decode over the unified model API.
+
+Attention-family models prefill with one full forward pass (capturing the
+per-layer K/V via ``return_cache``); recurrent families (ssm/hybrid) prefill
+by scanning decode steps (their state is O(1), the scan is jit-compiled once).
+Static batching: all requests in a batch share a padded prompt buffer — the
+serve_step lowered by the dry-run is exactly `engine.decode_step`.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.api import Model, build_model
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    output: List[int] = field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
+                 rng=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        rng = rng if rng is not None else jax.random.key(0)
+        self.params = params if params is not None else self.model.init(rng)
+        self.max_len = max_len
+        self._decode = jax.jit(self.model.decode_step)
+
+    # -- prefill ---------------------------------------------------------------
+    def _prefill_attention(self, tokens: jnp.ndarray):
+        """Dense/MoE/VLM: full forward capturing per-layer (k, v)."""
+        from repro.models import transformer as T
+        b, s = tokens.shape
+        logits, caches = T.forward(self.cfg, self.params, tokens,
+                                   return_cache=True)
+        k, v = caches                              # [L, B, S, kv, hd]
+        pad = self.max_len - s
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        return logits, {"k": k, "v": v}
+
+    def _prefill_scan(self, tokens: jnp.ndarray):
+        """Recurrent prefill: scan decode steps (ssm / hybrid / encdec)."""
+        b, s = tokens.shape
+        cache = self.model.init_cache(b, self.max_len)
+
+        def body(carry, t):
+            cache, _ = carry
+            logits, cache = self.model.decode_step(
+                self.params, cache, tokens[:, t][:, None], t)
+            return (cache, logits), None
+
+        (cache, logits), _ = jax.lax.scan(
+            lambda c, t: body(c, t), (cache, jnp.zeros(
+                (b, 1, self.cfg.vocab_size), jnp.float32)),
+            jnp.arange(s))
+        return logits, cache
+
+    def prefill(self, tokens: jnp.ndarray):
+        fam = self.cfg.family
+        if fam in ("dense", "vlm"):
+            return self._prefill_attention(tokens)
+        if fam == "moe":
+            # MoE shares the dense cache layout; forward has no return_cache
+            # hook, so prefill via the scan path.
+            return self._prefill_scan(tokens)
+        return self._prefill_scan(tokens)
+
+    # -- generation --------------------------------------------------------------
+    def generate(self, requests: List[Request]) -> List[Request]:
+        """Run a static batch of requests to completion (greedy)."""
+        b = len(requests)
+        prompt_len = max(len(r.prompt) for r in requests)
+        toks = np.zeros((b, prompt_len), np.int32)
+        for i, r in enumerate(requests):
+            toks[i, prompt_len - len(r.prompt):] = r.prompt     # left-pad
+        toks = jnp.asarray(toks)
+
+        logits, cache = self.prefill(toks)
+        last = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+
+        max_new = max(r.max_new_tokens for r in requests)
+        pos = prompt_len
+        for step in range(max_new):
+            for i, r in enumerate(requests):
+                if not r.done:
+                    r.output.append(int(last[i]))
+            if all(r.done for r in requests) or pos >= self.max_len:
+                break
+            logits, cache = self._decode(self.params, cache,
+                                         last[:, None], jnp.int32(pos))
+            last = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            pos += 1
+        return requests
+
+
+def serve_step_fn(cfg: ArchConfig):
+    """The (params, cache, tokens, pos) -> (logits, cache) step the dry-run
+    lowers for decode shapes."""
+    model = build_model(cfg)
+
+    def serve_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos)
+
+    return serve_step

@@ -1,0 +1,64 @@
+"""Checkpointing: msgpack-serialized pytrees (lease termination, §4.3).
+
+When the scheduler terminates a job's lease, the Synergy iterator checkpoints
+the train state to shared storage; on re-placement training resumes exactly.
+No orbax dependency — arrays go through raw bytes + dtype/shape headers.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _pack_leaf(x):
+    arr = np.asarray(x)
+    return {b"__nd__": True, b"dtype": arr.dtype.str, b"shape": list(arr.shape),
+            b"data": arr.tobytes()}
+
+
+def _unpack_leaf(d):
+    arr = np.frombuffer(d[b"data"], dtype=np.dtype(d[b"dtype"]))
+    return jnp.asarray(arr.reshape(d[b"shape"]))
+
+
+def save(path: str, tree: Any) -> None:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    payload = {
+        b"treedef": str(treedef).encode(),
+        b"leaves": [_pack_leaf(l) for l in leaves],
+    }
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    # atomic write: tmp + rename (a killed lease must never corrupt the ckpt)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(msgpack.packb(payload))
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype validated)."""
+    with open(path, "rb") as f:
+        payload = msgpack.unpackb(f.read())
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    saved = [_unpack_leaf(d) for d in payload[b"leaves"]]
+    if len(saved) != len(leaves):
+        raise ValueError(f"checkpoint has {len(saved)} leaves, expected {len(leaves)}")
+    for s, l in zip(saved, leaves):
+        if s.shape != l.shape:
+            raise ValueError(f"shape mismatch: {s.shape} vs {l.shape}")
+    return jax.tree_util.tree_unflatten(treedef, saved)
+
+
+def exists(path: str) -> bool:
+    return os.path.exists(path)

@@ -1,0 +1,138 @@
+"""Optimizers + LR schedules (pure JAX, no external deps).
+
+AdamW with decoupled weight decay and global-norm gradient clipping, plus
+SGD-momentum; warmup-cosine and warmup-linear schedules. Optimizer state is a
+plain pytree so it shards exactly like the parameters.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+def warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        t = jnp.clip(t, 0.0, 1.0)
+        cos = peak_lr * (final_frac + (1 - final_frac)
+                         * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return schedule
+
+
+def warmup_linear(peak_lr: float, warmup_steps: int, total_steps: int) -> Callable:
+    def schedule(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        lin = peak_lr * jnp.clip(1.0 - t, 0.0, 1.0)
+        return jnp.where(step < warmup_steps, warm, lin)
+    return schedule
+
+
+def constant(lr: float) -> Callable:
+    return lambda step: jnp.float32(lr)
+
+
+# ---------------------------------------------------------------------------
+# grad clipping
+# ---------------------------------------------------------------------------
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable         # params -> opt_state
+    update: Callable       # (grads, opt_state, params, step) -> (updates, opt_state)
+    name: str = "opt"
+
+
+def adamw(schedule: Callable, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip_norm: Optional[float] = 1.0) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"mu": jax.tree_util.tree_map(zeros, params),
+                "nu": jax.tree_util.tree_map(zeros, params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = schedule(step)
+        t = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, mu, nu, p):
+            g32 = g.astype(jnp.float32)
+            mu = b1 * mu + (1 - b1) * g32
+            nu = b2 * nu + (1 - b2) * jnp.square(g32)
+            step_ = (mu / bc1) / (jnp.sqrt(nu / bc2) + eps)
+            step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (-lr * step_).astype(p.dtype), mu, nu
+
+        out = jax.tree_util.tree_map(upd, grads, state["mu"], state["nu"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mu = jax.tree_util.tree_map(lambda o: o[1], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree_util.tree_map(lambda o: o[2], out,
+                                    is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mu": mu, "nu": nu}, gnorm
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def sgdm(schedule: Callable, momentum: float = 0.9,
+         clip_norm: Optional[float] = None) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree_util.tree_map(
+            lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        if clip_norm is not None:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = global_norm(grads)
+        lr = schedule(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (-lr * m).astype(p.dtype), m
+
+        out = jax.tree_util.tree_map(upd, grads, state["mom"], params)
+        updates = jax.tree_util.tree_map(lambda o: o[0], out,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        mom = jax.tree_util.tree_map(lambda o: o[1], out,
+                                     is_leaf=lambda x: isinstance(x, tuple))
+        return updates, {"mom": mom}, gnorm
+
+    return Optimizer(init=init, update=update, name="sgdm")
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(lambda p, u: p + u, params, updates)

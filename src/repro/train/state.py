@@ -1,0 +1,34 @@
+"""TrainState: a plain pytree bundling params + optimizer state + step."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.train.optimizer import Optimizer, apply_updates
+
+
+def create(params, optimizer: Optimizer) -> Dict[str, Any]:
+    return {
+        "params": params,
+        "opt": optimizer.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(loss_fn, optimizer: Optimizer):
+    """(state, batch) -> (state, metrics). Pure function — jit/pjit it."""
+
+    def train_step(state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"], batch)
+        updates, opt, gnorm = optimizer.update(
+            grads, state["opt"], state["params"], state["step"])
+        new_state = {
+            "params": apply_updates(state["params"], updates),
+            "opt": opt,
+            "step": state["step"] + 1,
+        }
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

@@ -1,0 +1,97 @@
+"""Training loop over the unified model API.
+
+Accepts any batch iterator — in particular the Synergy iterator
+(repro.core.iterator), which is how the scheduler's CPU/memory leases reach
+the data pipeline. Works on one CPU device and under pjit on a mesh.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.api import build_model
+from repro.train import checkpoint as ckpt_lib
+from repro.train import state as state_lib
+from repro.train.optimizer import adamw, warmup_cosine
+
+
+@dataclass
+class TrainerConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 20
+    total_steps: int = 1000
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    log_every: int = 10
+    ckpt_path: Optional[str] = None
+    ckpt_every: int = 0
+
+
+# Memoize jitted step functions: many Trainer instances for the same config
+# (live profiling probes, restarted leases) must share one compiled step.
+_STEP_FN_CACHE: Dict = {}
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, tcfg: TrainerConfig = TrainerConfig(),
+                 rng=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.model = build_model(cfg)
+        self.optimizer = adamw(
+            warmup_cosine(tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps),
+            weight_decay=tcfg.weight_decay, clip_norm=tcfg.clip_norm)
+        rng = rng if rng is not None else jax.random.key(0)
+        params = self.model.init(rng)
+        self.state = state_lib.create(params, self.optimizer)
+        key = (cfg, tcfg.peak_lr, tcfg.warmup_steps, tcfg.total_steps,
+               tcfg.weight_decay, tcfg.clip_norm)
+        if key not in _STEP_FN_CACHE:
+            _STEP_FN_CACHE[key] = jax.jit(
+                state_lib.make_train_step(self.model.loss, self.optimizer))
+        self._step_fn = _STEP_FN_CACHE[key]
+        self.history: List[Dict[str, float]] = []
+
+    @property
+    def step(self) -> int:
+        return int(self.state["step"])
+
+    def maybe_restore(self) -> bool:
+        p = self.tcfg.ckpt_path
+        if p and ckpt_lib.exists(p):
+            self.state = ckpt_lib.restore(p, self.state)
+            return True
+        return False
+
+    def save(self) -> None:
+        if self.tcfg.ckpt_path:
+            ckpt_lib.save(self.tcfg.ckpt_path, self.state)
+
+    def train_step(self, batch) -> Dict[str, float]:
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.perf_counter()
+        self.state, metrics = self._step_fn(self.state, batch)
+        loss = float(metrics["loss"])
+        rec = {"step": self.step, "loss": loss,
+               "grad_norm": float(metrics["grad_norm"]),
+               "step_seconds": time.perf_counter() - t0}
+        self.history.append(rec)
+        return rec
+
+    def fit(self, batches: Iterable[dict],
+            max_steps: Optional[int] = None) -> List[Dict[str, float]]:
+        n = 0
+        for batch in batches:
+            rec = self.train_step(batch)
+            n += 1
+            if (self.tcfg.ckpt_every and self.tcfg.ckpt_path
+                    and n % self.tcfg.ckpt_every == 0):
+                self.save()
+            if max_steps is not None and n >= max_steps:
+                break
+        return self.history

