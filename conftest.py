@@ -1,0 +1,23 @@
+"""Root pytest config: make `python -m pytest -x -q` work with no env setup.
+
+1. Put src/ on sys.path (mirrors PYTHONPATH=src; also configured in
+   pyproject.toml for pytest>=7, kept here for direct `pytest` invocations
+   from any CWD and for tooling that imports this file).
+2. Force a multi-device host platform BEFORE jax first initializes, so the
+   sharding tests exercise real 8-way meshes on CPU. Skipped when the flag
+   is already present (e.g. the 512-device dry-run sweep env) or when jax
+   was somehow imported first (the flag would be locked in).
+"""
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.abspath(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+if ("jax" not in sys.modules
+        and "--xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8").strip()

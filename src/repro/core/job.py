@@ -31,6 +31,7 @@ class Job:
     demand_cpu: float = 0.0              # best-case CPU demand (job total)
     demand_mem: float = 0.0              # best-case memory demand (GB)
     prop_rate: float = 0.0               # W[Cg, Mg] — GPU-proportional rate
+    profile_overhead_s: float = 0.0      # wall-clock spent profiling (§5)
 
     # -- runtime state ----------------------------------------------------------
     remaining: float = field(default=-1.0)   # proportional-seconds left

@@ -132,16 +132,27 @@ class Simulator:
         max_t = cfg.max_hours * 3600.0
         dirty = True                     # re-schedule only when the mix changed
 
+        pending: List = []               # (ready_time, job_id, job) min-heap
+
         while len(finished) < n and t < max_t:
-            # admit arrivals
+            # admit arrivals; with overhead accounting a job only becomes
+            # schedulable after its empirical probes finish (§5: JCT is still
+            # measured from arrival, so profiling time is charged to the job)
             while (next_arrival_idx < n
                    and self.jobs[next_arrival_idx].arrival_time <= t + 1e-9):
                 job = self.jobs[next_arrival_idx]
                 self.profiler.profile_job(job)
-                if cfg.include_profile_overhead and job.matrix is not None:
-                    job.arrival_time += 0.0   # profiling happens off-cluster
-                queue.append(job)
                 next_arrival_idx += 1
+                if cfg.include_profile_overhead and job.matrix is not None:
+                    job.profile_overhead_s = job.matrix.profile_seconds
+                ready = job.arrival_time + job.profile_overhead_s
+                if ready <= t + 1e-9:
+                    queue.append(job)
+                    dirty = True
+                else:
+                    heapq.heappush(pending, (ready, job.job_id, job))
+            while pending and pending[0][0] <= t + 1e-9:
+                queue.append(heapq.heappop(pending)[2])
                 dirty = True
 
             # schedule round
@@ -158,13 +169,15 @@ class Simulator:
             result.util_samples.append(util)
             result.util_times.append(t)
             result.queue_len_samples.append(
-                sum(1 for j in queue if j.current_rate == 0))
+                sum(1 for j in queue if j.current_rate == 0) + len(pending))
 
             # advance to next round boundary, processing finishes inside
             round_end = t + cfg.round_seconds
             if next_arrival_idx < n:
                 round_end = min(round_end,
                                 max(t + 1.0, self.jobs[next_arrival_idx].arrival_time))
+            if pending:
+                round_end = min(round_end, max(t + 1.0, pending[0][0]))
             while t < round_end - 1e-9:
                 running = [j for j in queue if j.current_rate > 0]
                 ttf = min((j.time_to_finish() for j in running),
@@ -183,13 +196,17 @@ class Simulator:
                     queue.remove(j)
                     finished.append(j)
                     dirty = True
-                if not running and next_arrival_idx < n:
-                    # idle: jump to the next arrival
-                    t = max(t, self.jobs[next_arrival_idx].arrival_time)
+                if not running:
+                    # idle: jump to the next arrival or profile completion
+                    upcoming = []
+                    if next_arrival_idx < n:
+                        upcoming.append(self.jobs[next_arrival_idx].arrival_time)
+                    if pending:
+                        upcoming.append(pending[0][0])
+                    if upcoming:
+                        t = max(t, min(upcoming))
                     break
-                if not running and next_arrival_idx >= n:
-                    break
-            if not queue and next_arrival_idx >= n:
+            if not queue and not pending and next_arrival_idx >= n:
                 break
 
         mon = [j for j in finished]
@@ -208,9 +225,11 @@ class Simulator:
 def simulate(n_servers: int, jobs: Sequence[Job], *, policy: str = "srtf",
              allocator: str = "tune", round_seconds: float = 300.0,
              spec: ServerSpec = ServerSpec(), steady_skip: int = 0,
-             steady_count: int = 0, max_hours: float = 24_000.0) -> SimResult:
+             steady_count: int = 0, max_hours: float = 24_000.0,
+             include_profile_overhead: bool = False) -> SimResult:
     cfg = SimConfig(round_seconds=round_seconds, policy=policy,
                     allocator=allocator, steady_skip=steady_skip,
-                    steady_count=steady_count, max_hours=max_hours)
+                    steady_count=steady_count, max_hours=max_hours,
+                    include_profile_overhead=include_profile_overhead)
     sim = Simulator(Cluster(n_servers, spec), jobs, cfg)
     return sim.run()

@@ -1,0 +1,15 @@
+"""repro.dist — device-mesh distribution subsystem.
+
+``repro.dist.sharding`` is the logical-axis sharding layer used by every
+model family, the serve engine, and the multi-pod dry-run. See
+src/repro/dist/README.md for the design.
+"""
+from repro.dist import sharding
+from repro.dist.sharding import (Rules, attention_scheme, axis_rules,
+                                 current_rules, named, param_pspecs,
+                                 production_rules_table, shard, shard_spec)
+
+__all__ = [
+    "sharding", "Rules", "attention_scheme", "axis_rules", "current_rules",
+    "named", "param_pspecs", "production_rules_table", "shard", "shard_spec",
+]

@@ -1,0 +1,313 @@
+"""Logical-axis sharding rules over a device mesh.
+
+Model code never names mesh axes directly. It annotates activations with
+*logical* axis names (``batch``, ``kv_seq``, ``ffn``, ``vocab``, ``experts``,
+``inner_flat``, ``heads``/``heads_flat``, ``embed``) and a *rules table* maps
+each logical name to zero or more mesh axes. The table is installed with the
+``axis_rules(mesh, table)`` context manager; all helpers read the innermost
+active rules via ``current_rules()``.
+
+The off-mesh contract: when no rules are active (single-host CPU tests, the
+live runtime's per-job processes) every helper is an exact no-op —
+``shard``/``shard_spec`` return their input unchanged and
+``attention_scheme`` returns ``None`` — so the same model code runs anywhere.
+
+On-mesh, every constraint is *sanitized* before it is applied: a mesh axis is
+dropped from a PartitionSpec entry when (a) it does not exist on the active
+mesh, (b) it was already consumed by an earlier dimension of the same spec,
+or (c) the dimension size is not divisible by the axis size. This keeps
+annotations best-effort: a table tuned for the 256-chip production mesh
+degrades gracefully on an 8-device host mesh or on awkward shapes (GQA head
+counts, batch 1) instead of erroring.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, List, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+#: one mesh-axis assignment: nothing, a single axis, or several fused axes
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+__all__ = [
+    "Rules", "axis_rules", "current_rules", "shard", "shard_spec",
+    "attention_scheme", "production_rules_table", "param_pspecs", "named",
+    "PARAM_LOGICAL_AXES",
+]
+
+
+# ---------------------------------------------------------------------------
+# rules registry
+# ---------------------------------------------------------------------------
+class Rules:
+    """An installed (mesh, logical-axis table) pair."""
+
+    def __init__(self, mesh, table: Dict[str, MeshAxes]):
+        self.mesh = mesh
+        self.table: Dict[str, MeshAxes] = {
+            k: tuple(v) if isinstance(v, list) else v
+            for k, v in dict(table).items()
+        }
+        self.sizes: Dict[str, int] = dict(
+            zip(mesh.axis_names, mesh.devices.shape))
+
+    def mesh_axes(self, logical: Optional[str]) -> MeshAxes:
+        """Mesh axes assigned to a logical axis name (None if unmapped)."""
+        if logical is None:
+            return None
+        return self.table.get(logical)
+
+    def axis_size(self, axes: MeshAxes) -> int:
+        """Total number of shards over ``axes`` (1 for None)."""
+        n = 1
+        for a in _flat(axes):
+            n *= self.sizes.get(a, 1)
+        return n
+
+    def __repr__(self) -> str:
+        return f"Rules(mesh={tuple(self.sizes.items())}, table={self.table})"
+
+
+_STATE = threading.local()
+
+
+def _stack() -> List[Rules]:
+    if not hasattr(_STATE, "stack"):
+        _STATE.stack = []
+    return _STATE.stack
+
+
+def current_rules() -> Optional[Rules]:
+    """The innermost active Rules, or None when off-mesh."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+@contextlib.contextmanager
+def axis_rules(mesh, table: Dict[str, MeshAxes]):
+    """Install ``table`` over ``mesh`` for the dynamic extent of the block."""
+    rules = Rules(mesh, table)
+    _stack().append(rules)
+    try:
+        yield rules
+    finally:
+        _stack().pop()
+
+
+# ---------------------------------------------------------------------------
+# spec construction / sanitization
+# ---------------------------------------------------------------------------
+def _flat(axes: MeshAxes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    if isinstance(axes, (tuple, list)):
+        return tuple(axes)
+    return (axes,)
+
+
+def _sanitize(parts, shape, rules: Rules) -> P:
+    """Right-pad ``parts`` to ``shape``'s rank and drop invalid entries
+    (unknown mesh axis, duplicate use, non-divisible dimension)."""
+    parts = list(parts)[:len(shape)]
+    parts += [None] * (len(shape) - len(parts))
+    used: set = set()
+    out = []
+    for dim, ax in zip(shape, parts):
+        axes = _flat(ax)
+        if (not axes
+                or any(a not in rules.sizes for a in axes)
+                or any(a in used for a in axes)
+                or dim % rules.axis_size(ax) != 0):
+            out.append(None)
+            continue
+        used.update(axes)
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def _overlaps(a: MeshAxes, b: MeshAxes) -> bool:
+    return bool(set(_flat(a)) & set(_flat(b)))
+
+
+# ---------------------------------------------------------------------------
+# constraint helpers (no-ops off-mesh)
+# ---------------------------------------------------------------------------
+def shard(x, *logical_axes):
+    """Constrain ``x`` by logical axis names, one per dimension.
+
+    ``shard(h, "batch", None, "ffn")`` constrains a [B, S, F] activation to
+    (batch-axes, replicated, ffn-axes). Unmapped names, missing trailing
+    names, and non-divisible dimensions all degrade to replication.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    parts = [rules.mesh_axes(name) for name in logical_axes]
+    spec = _sanitize(parts, x.shape, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+def shard_spec(x, pspec):
+    """Constrain ``x`` with an explicit PartitionSpec (mesh-axis names).
+
+    The spec is sanitized against the active mesh and ``x.shape`` first, so
+    callers may pass production specs unconditionally.
+    """
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = _sanitize(tuple(pspec), x.shape, rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, spec))
+
+
+# ---------------------------------------------------------------------------
+# attention scheme selection
+# ---------------------------------------------------------------------------
+def attention_scheme(b: int, s: int, nh: int, kv_s: int):
+    """Pick the attention sharding layout for shapes (B, Sq, H, Skv).
+
+    Returns None off-mesh, else {"q", "kv", "logits"} PartitionSpecs laid out
+    for q/kv of shape [B, S, H, D] and logits of [B, H, Sq, Sk]:
+
+      * head-sharded   — H divides the 'heads' axes: the classic TP layout.
+      * q-seq-sharded  — awkward head count but a long query: shard Sq.
+      * kv-seq-sharded — decode (Sq == 1) with awkward heads: shard the
+        cache sequence; XLA resolves the sharded softmax reduction with a
+        partial-softmax all-reduce.
+      * batch-only     — nothing else fits.
+    """
+    rules = current_rules()
+    if rules is None:
+        return None
+
+    def fits(n: int, ax: MeshAxes) -> bool:
+        size = rules.axis_size(ax)
+        return ax is not None and size > 1 and n % size == 0
+
+    b_ax = rules.mesh_axes("batch")
+    if not fits(b, b_ax):
+        b_ax = None
+    m_ax = rules.mesh_axes("heads")
+    if m_ax is not None and rules.axis_size(m_ax) <= 1:
+        m_ax = None
+    kv_ax = rules.mesh_axes("kv_seq")
+    if not fits(kv_s, kv_ax) or _overlaps(kv_ax, b_ax):
+        kv_ax = None
+    if b_ax is None and m_ax is None and kv_ax is None:
+        return None
+
+    msize = rules.axis_size(m_ax) if m_ax is not None else 0
+    if m_ax is not None and nh % msize == 0:
+        kv_seq = kv_ax if not _overlaps(kv_ax, m_ax) else None
+        return {"q": P(b_ax, None, m_ax, None),
+                "kv": P(b_ax, kv_seq, m_ax, None),
+                "logits": P(b_ax, m_ax, None, None)}
+    if m_ax is not None and s > 1 and s % msize == 0:
+        # long query, non-dividing heads: shard the query sequence; KV is
+        # replicated over the head axes so each shard sees every key.
+        return {"q": P(b_ax, m_ax, None, None),
+                "kv": P(b_ax, kv_ax, None, None),
+                "logits": P(b_ax, None, m_ax, None)}
+    if m_ax is not None and s == 1 and kv_s % msize == 0:
+        return {"q": P(b_ax, None, None, None),
+                "kv": P(b_ax, m_ax, None, None),
+                "logits": P(b_ax, None, None, m_ax)}
+    return {"q": P(b_ax, None, None, None),
+            "kv": P(b_ax, kv_ax, None, None),
+            "logits": P(b_ax, None, None, None)}
+
+
+# ---------------------------------------------------------------------------
+# production tables / parameter specs (consumed by launch/dryrun.py)
+# ---------------------------------------------------------------------------
+def production_rules_table(multi_pod: bool = False, *,
+                          seq_shard: bool = False) -> Dict[str, MeshAxes]:
+    """Logical-axis table for the production meshes in launch/mesh.py.
+
+    Single pod: ("data", "model") = (16, 16); multi-pod adds a leading "pod"
+    axis fused into the batch axes. ``seq_shard`` routes kv_seq to "data"
+    for the long-context decode shape (batch 1 — the batch axes are idle and
+    the sanitizer resolves the data-axis collision in batch's favor
+    otherwise). Callers may retarget entries before installing the table,
+    e.g. ``table["kv_seq"] = "model"`` for small-KV-head decode.
+    """
+    batch: MeshAxes = ("pod", "data") if multi_pod else "data"
+    return {
+        "batch": batch,
+        "heads": "model",
+        "heads_flat": "model",
+        "kv_seq": "data" if seq_shard else None,
+        "ffn": "model",
+        "vocab": "model",
+        "experts": "model",
+        "inner_flat": "model",
+        "embed": None,
+        "model": None,
+    }
+
+
+#: logical axes of each parameter's *trailing* dimensions, keyed by leaf name.
+#: Leading stacked-layer / group dimensions are always replicated. Where two
+#: entries map to the same mesh axes (e.g. experts and ffn -> "model") the
+#: sanitizer keeps the leftmost — expert parallelism wins over TP within an
+#: expert, matching the [E, C, D] x [E, D, F] batched-GEMM layout in moe.py.
+PARAM_LOGICAL_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings
+    "tok_emb": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    # attention
+    "wq": ("embed", "heads_flat"),
+    "wk": ("embed", "heads_flat"),
+    "wv": ("embed", "heads_flat"),
+    "bq": ("heads_flat",),
+    "bk": ("heads_flat",),
+    "bv": ("heads_flat",),
+    "wo": ("heads_flat", "embed"),
+    # dense MLP
+    "w_gate": ("embed", "ffn"),
+    "w_up": ("embed", "ffn"),
+    "w_down": ("ffn", "embed"),
+    # MoE
+    "router": ("embed", "experts"),
+    "we_gate_up": ("experts", "embed", "ffn"),
+    "we_down": ("experts", "ffn", "embed"),
+    # Mamba2 / SSD
+    "in_proj": ("embed", "inner_flat"),
+    "out_proj": ("inner_flat", "embed"),
+    "conv_w": (None, "inner_flat"),
+    "conv_b": ("inner_flat",),
+    "A_log": ("heads",),
+    "dt_bias": ("heads",),
+    "D": ("heads",),
+}
+
+
+def param_pspecs(pshape, rules: Rules):
+    """PartitionSpec pytree for a params shape-tree under ``rules``.
+
+    Leaves are matched by their final path component against
+    ``PARAM_LOGICAL_AXES`` (right-aligned over trailing dims); unknown leaves
+    (norm scales, anything new) are replicated. Every spec is full-rank and
+    sanitized, so the result can go straight into ``named``/``jax.jit``.
+    """
+    def spec_for(path, leaf):
+        name = str(getattr(path[-1], "key", path[-1])) if path else ""
+        logical = PARAM_LOGICAL_AXES.get(name, ())
+        ndim = len(leaf.shape)
+        trailing = [rules.mesh_axes(a) for a in logical[-ndim:]]
+        parts = [None] * (ndim - len(trailing)) + trailing
+        return _sanitize(parts, leaf.shape, rules)
+
+    return jax.tree_util.tree_map_with_path(spec_for, pshape)
+
+
+def named(spec, mesh):
+    """Map a PartitionSpec pytree to NamedShardings on ``mesh``."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec,
+        is_leaf=lambda x: isinstance(x, P))

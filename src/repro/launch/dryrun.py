@@ -7,11 +7,22 @@ Usage:
         --shape train_4k --mesh pod --out experiments/dryrun.jsonl
 
 The XLA_FLAGS assignment below is the FIRST executable statement — before
-any jax import (device count is locked at first init).
+any jax import (device count is locked at first init). REPRO_DRYRUN_DEVICES
+overrides the forced device count (CI smoke runs use 8 with --mesh host);
+when jax is already imported (in-process test usage) the flag is left alone.
 """
 import os
-os.environ["XLA_FLAGS"] = (os.environ.get("_EXTRA_XLA_FLAGS", "") +
-                           " --xla_force_host_platform_device_count=512").strip()
+import sys
+
+if "jax" not in sys.modules:
+    _host_run = any(
+        a in ("--mesh=host",) or (a == "host" and sys.argv[i - 1] == "--mesh")
+        for i, a in enumerate(sys.argv))
+    _n_dev = os.environ.get("REPRO_DRYRUN_DEVICES",
+                            "8" if _host_run else "512")
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("_EXTRA_XLA_FLAGS", "")
+        + f" --xla_force_host_platform_device_count={_n_dev}").strip()
 
 import argparse
 import json
@@ -26,6 +37,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import INPUT_SHAPES, get_config
 from repro.dist import sharding as shd
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               axis_sizes, make_host_mesh,
                                make_production_mesh)
 from repro.models.api import build_model, cache_specs, input_specs, params_specs
 from repro.train import state as state_lib
@@ -86,9 +98,9 @@ def cache_pspecs(cfg, cache_shape, mesh, *, seq_shard: bool, batch: int):
     ba = _batch_axes(mesh)
     bsz = 1
     for a in ba:
-        bsz *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+        bsz *= axis_sizes(mesh)[a]
     b_ax = ba if _div(batch, bsz) else None
-    msize = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    msize = axis_sizes(mesh)["model"]
 
     def spec_for(path, leaf):
         name = "/".join(str(getattr(p, "key", p)) for p in path)
@@ -123,7 +135,7 @@ def opt_state_pspecs(param_specs_tree, params_shape, mesh):
     """ZeRO-1: shard optimizer moments over the data axes on top of the
     param's own spec (first unsharded, divisible dimension)."""
     ba = _batch_axes(mesh)
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = axis_sizes(mesh)
     dsz = 1
     for a in ba:
         dsz *= sizes[a]
@@ -160,8 +172,8 @@ def _probe_plan(arch: str) -> tuple:
 
 
 def probe_slopes(arch: str, shape_name: str, multi_pod: bool, *,
-                 zero1: bool, remat: str,
-                 extra_cfg: Optional[dict] = None) -> Dict[str, float]:
+                 zero1: bool, remat: str, extra_cfg: Optional[dict] = None,
+                 mesh_kind: Optional[str] = None) -> Dict[str, float]:
     (la, lb), opts, l_full = _probe_plan(arch)
     vals = {}
     for l in (la, lb):
@@ -170,7 +182,8 @@ def probe_slopes(arch: str, shape_name: str, multi_pod: bool, *,
         if opts.get("scale_enc"):
             ov["n_enc_layers"] = l
         rec, _ = lower_combo(arch, shape_name, multi_pod, zero1=zero1,
-                             remat=remat, extra_cfg=ov, probe=False)
+                             remat=remat, extra_cfg=ov, probe=False,
+                             mesh_kind=mesh_kind)
         vals[l] = rec
     out = {}
     for key in ("flops_per_chip", "bytes_per_chip", "wire_bytes_per_chip"):
@@ -187,7 +200,7 @@ def probe_slopes(arch: str, shape_name: str, multi_pod: bool, *,
 def sharded_arg_bytes(shape_tree, spec_tree, mesh) -> float:
     """Analytic per-device bytes of the program arguments (the reliable
     'does it fit' number — CPU memory_analysis reports are inconsistent)."""
-    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes = axis_sizes(mesh)
 
     def leaf_bytes(leaf, spec):
         denom = 1
@@ -212,16 +225,23 @@ def sharded_arg_bytes(shape_tree, spec_tree, mesh) -> float:
 
 def lower_combo(arch: str, shape_name: str, multi_pod: bool,
                 *, zero1: bool = True, remat: str = "full",
-                extra_cfg: Optional[dict] = None, probe: bool = True):
-    """Build + lower + compile one combination; returns (record, compiled)."""
+                extra_cfg: Optional[dict] = None, probe: bool = True,
+                mesh_kind: Optional[str] = None):
+    """Build + lower + compile one combination; returns (record, compiled).
+
+    ``mesh_kind="host"`` targets whatever devices the host exposes (CI smoke
+    on a forced 8-device CPU); default is the production pod/multipod mesh.
+    """
     t_start = time.time()
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = (make_host_mesh() if mesh_kind == "host"
+            else make_production_mesh(multi_pod=multi_pod))
     ishape = INPUT_SHAPES[shape_name]
     seq_shard = shape_name == "long_500k"
     table = shd.production_rules_table(multi_pod, seq_shard=seq_shard)
     if (ishape.mode == "decode" and not seq_shard):
         pre_cfg = get_config(arch, **(extra_cfg or {}))
-        if pre_cfg.n_kv_heads and pre_cfg.n_kv_heads % 16 != 0:
+        msize = axis_sizes(mesh)["model"]
+        if pre_cfg.n_kv_heads and pre_cfg.n_kv_heads % msize != 0:
             table["kv_seq"] = "model"
 
     overrides = dict(dtype="bfloat16", param_dtype="bfloat16")
@@ -245,7 +265,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
         ba = _batch_axes(mesh)
         basz = 1
         for a in ba:
-            basz *= dict(zip(mesh.axis_names, mesh.devices.shape))[a]
+            basz *= axis_sizes(mesh)[a]
         b_ax = (ba if len(ba) > 1 else ba[0]) if _div(bsz, basz) else None
         bsharding = jax.tree_util.tree_map(
             lambda s: NamedSharding(mesh, P(b_ax, *([None] * (len(s.shape) - 1)))),
@@ -301,6 +321,8 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
 
     n_chips = mesh.devices.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):       # older jax: one dict per program
+        cost = cost[0] if cost else {}
     try:
         mem = compiled.memory_analysis()
         mem_stats = {
@@ -326,7 +348,8 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
     probe_stats = None
     if probe:
         probe_stats = probe_slopes(arch, shape_name, multi_pod, zero1=zero1,
-                                   remat=remat, extra_cfg=extra_cfg)
+                                   remat=remat, extra_cfg=extra_cfg,
+                                   mesh_kind=mesh_kind)
         flops = probe_stats["flops_per_chip"]
         bytes_accessed = probe_stats["bytes_per_chip"]
         wire = probe_stats["wire_bytes_per_chip"]
@@ -346,7 +369,7 @@ def lower_combo(arch: str, shape_name: str, multi_pod: bool,
     record = {
         "arch": arch,
         "shape": shape_name,
-        "mesh": "multipod" if multi_pod else "pod",
+        "mesh": mesh_kind or ("multipod" if multi_pod else "pod"),
         "n_chips": n_chips,
         "mode": ishape.mode,
         "zero1": zero1,
@@ -377,7 +400,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--shape", required=True, choices=list(INPUT_SHAPES))
-    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "host"])
     ap.add_argument("--out", default=None)
     ap.add_argument("--no-zero1", action="store_true")
     ap.add_argument("--no-probe", action="store_true",
@@ -392,7 +415,8 @@ def main() -> None:
     record, compiled = lower_combo(
         args.arch, args.shape, args.mesh == "multipod",
         zero1=not args.no_zero1, remat=args.remat, extra_cfg=extra,
-        probe=not args.no_probe)
+        probe=not args.no_probe,
+        mesh_kind="host" if args.mesh == "host" else None)
     if args.tag:
         record["tag"] = args.tag
 

@@ -17,6 +17,25 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def axis_sizes(mesh) -> dict:
+    """{axis name: size} for a mesh (the {"data": 16, "model": 16} map)."""
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_host_mesh(*, model_axis: int = 2):
+    """("data", "model") mesh over whatever devices the host exposes.
+
+    CI / laptop smoke path: with XLA_FLAGS=--xla_force_host_platform_device_
+    count=8 this yields a (4, 2) mesh, small enough to compile quickly but
+    multi-device along both logical directions so every sharding rule is
+    exercised for real."""
+    n = jax.device_count()
+    model_axis = max(1, min(model_axis, n))
+    while n % model_axis:
+        model_axis -= 1
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
 # TPU v5e roofline constants (per chip) — see EXPERIMENTS.md §Roofline.
 PEAK_FLOPS_BF16 = 197e12       # FLOP/s
 HBM_BW = 819e9                 # bytes/s

@@ -1,0 +1,83 @@
+"""Deterministic fallback for ``hypothesis`` when it is not installed.
+
+The test image does not always ship hypothesis and this repo must not add
+dependencies, so the property tests import through this shim:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from tests._compat import given, settings, st
+
+The shim replays each property test over ``max_examples`` pseudo-random
+draws from the declared strategies, seeded per test name — deterministic
+across runs, no shrinking, but the same example volume as the hypothesis
+profiles used here. Only the strategy surface these tests use is provided
+(integers, floats, sampled_from, lists).
+"""
+from __future__ import annotations
+
+import random
+import zlib
+from typing import Any, Callable, Dict
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def example(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        options = list(options)
+        return _Strategy(lambda r: r.choice(options))
+
+    @staticmethod
+    def lists(elements: _Strategy, *, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random):
+            n = r.randint(min_size, max_size)
+            return [elements.example(r) for _ in range(n)]
+        return _Strategy(draw)
+
+
+st = _Strategies()
+
+
+def settings(*, max_examples: int = 10, **_ignored):
+    """Record ``max_examples`` on the (already given-wrapped) test."""
+    def deco(fn):
+        fn._compat_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strategies: _Strategy):
+    """Replay the test over deterministic draws from ``strategies``."""
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_compat_max_examples", 10)
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for _ in range(n):
+                drawn: Dict[str, Any] = {
+                    name: strat.example(rng)
+                    for name, strat in strategies.items()
+                }
+                fn(**drawn)
+        # NOT functools.wraps: the wrapper must present a zero-arg signature
+        # or pytest resolves the strategy kwargs as fixtures.
+        for attr in ("__name__", "__qualname__", "__doc__", "__module__"):
+            setattr(wrapper, attr, getattr(fn, attr))
+        return wrapper
+    return deco

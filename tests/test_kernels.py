@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no new deps: deterministic shim
+    from tests._compat import given, settings, st
 
 from repro.kernels import ops, ref
 

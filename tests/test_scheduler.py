@@ -17,7 +17,10 @@ import copy
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                      # no new deps: deterministic shim
+    from tests._compat import given, settings, st
 
 from repro.core import opt
 from repro.core.allocators import get_allocator
@@ -165,6 +168,37 @@ def test_simulation_tune_never_worse():
                         allocator="tune")
         assert tune.avg_jct <= prop.avg_jct * 1.03, split
         assert tune.makespan <= prop.makespan * 1.05, split
+
+
+def test_profile_overhead_charged_to_jct():
+    """§5 knob: with include_profile_overhead the job is held out of the
+    queue for exactly its empirical probe time (JCT measured from arrival)."""
+    def one_job():
+        return [Job(0, "resnet50", gpu_demand=1, arrival_time=0.0,
+                    duration=1800.0)]
+
+    base = simulate(1, one_job(), policy="fifo", allocator="tune")
+    with_ovh = simulate(1, one_job(), policy="fifo", allocator="tune",
+                        include_profile_overhead=True)
+    job = with_ovh.jobs[0]
+    assert job.profile_overhead_s == job.matrix.profile_seconds > 0
+    assert base.jobs[0].profile_overhead_s == 0.0
+    delta = with_ovh.jobs[0].jct() - base.jobs[0].jct()
+    assert abs(delta - job.profile_overhead_s) < 1.5, delta
+
+
+def test_profile_overhead_mid_stream_arrivals():
+    """Delayed readiness must not starve or reorder the arrival stream."""
+    jobs = generate(TraceConfig(n_jobs=20, split=(30, 50, 20),
+                                arrival="poisson", jobs_per_hour=30.0, seed=4))
+    res = simulate(4, jobs, policy="srtf", allocator="tune",
+                   include_profile_overhead=True)
+    assert all(j.finish_time is not None for j in res.jobs)
+    for j in res.jobs:
+        assert j.profile_overhead_s > 0
+        # can never start before profiling completed
+        assert j.start_time is None or (
+            j.start_time >= j.arrival_time + j.profile_overhead_s - 1e-6)
 
 
 def test_simulation_all_jobs_finish():
