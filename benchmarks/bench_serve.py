@@ -1,0 +1,56 @@
+"""Serve engines — static vs continuous vs sharded-continuous tokens/s for an
+attention-family and an ssm-family architecture (smoke shapes; set
+BENCH_FULL=1 for a larger request set)."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import FAST
+from repro.configs import get_config
+from repro.serve import ServeEngine, ServeRequest, sharded_engine
+
+ARCHS = ("qwen2-0.5b", "mamba2-780m")
+
+
+def _requests(cfg, n, max_new, seed=0):
+    rng = np.random.default_rng(seed)
+    return [ServeRequest(
+        rng.integers(1, cfg.vocab_size,
+                     size=int(rng.integers(4, 12))).astype(np.int32),
+        max_new_tokens=max_new, arrival_time=i / 2.0)
+        for i in range(n)]
+
+
+def _row(name, stats):
+    us = 1e6 * stats.wall_s / max(stats.new_tokens, 1)
+    return {"name": name, "us_per_call": us,
+            "derived": (f"tok_s={stats.tokens_per_s:.1f} "
+                        f"util={stats.slot_utilization:.2f} "
+                        f"lat_steps={stats.mean_latency_steps:.1f}")}
+
+
+def run():
+    n, max_new = (8, 8) if FAST else (32, 32)
+    rows = []
+    for arch in ARCHS:
+        cfg = get_config(arch, smoke=True)
+
+        static = ServeEngine(cfg, max_len=64)
+        reqs = _requests(cfg, n, max_new)
+        for r in reqs:
+            r.arrival_time = 0.0
+        _, st = static.run(reqs)
+        rows.append(_row(f"serve/static/{arch}", st))
+
+        cont = ServeEngine(cfg, max_len=64, n_slots=max(2, n // 2),
+                           policy="fcfs")
+        _, st = cont.run(_requests(cfg, n, max_new))
+        rows.append(_row(f"serve/continuous/{arch}", st))
+
+        shard = sharded_engine(cfg, n_slots=max(2, n // 2), max_len=64)
+        _, st = shard.run(_requests(cfg, n, max_new))
+        row = _row(f"serve/sharded-continuous/{arch}", st)
+        row["derived"] += f" ndev={jax.device_count()}"
+        rows.append(row)
+    return rows

@@ -14,6 +14,14 @@ import sys
 import time
 import traceback
 
+# Force a multi-device host platform BEFORE any benchmark module imports jax,
+# so bench_serve's sharded-continuous rows measure a real (4, 2) mesh instead
+# of a degenerate single-device one. No-op if jax is already imported or the
+# flag is already set (REPRO_BENCH_DEVICES overrides the count).
+from repro.launch._bootstrap import force_host_devices
+
+force_host_devices(os.environ.get("REPRO_BENCH_DEVICES", "8"))
+
 MODULES = [
     "bench_profiling",        # Fig 5
     "bench_fig1_load",        # Fig 1 / Fig 9
@@ -25,6 +33,7 @@ MODULES = [
     "bench_fig6_philly",      # Fig 6 / Table 6
     "bench_opt_vs_tune",      # section 5.6
     "bench_kernels",          # substrate kernels
+    "bench_serve",            # serve engines (static/continuous/sharded)
     "bench_table5_cluster",   # Table 5 (live runtime; slowest — last)
 ]
 

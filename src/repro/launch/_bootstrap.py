@@ -1,0 +1,38 @@
+"""Pre-jax process bootstrap shared by the launch CLIs.
+
+The host-platform device count is locked at first jax init, so drivers that
+want a forced multi-device CPU platform must set XLA_FLAGS before anything
+imports jax. This module must therefore stay import-light (os/sys only).
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import List, Optional
+
+
+def mesh_flag(argv: List[str]) -> Optional[str]:
+    """The value of a ``--mesh X`` / ``--mesh=X`` argument, if present."""
+    for i, a in enumerate(argv):
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+    return None
+
+
+def force_host_devices(n) -> None:
+    """Force ``n`` host-platform devices before the first jax init.
+
+    No-op when jax is already imported (the count is locked) or when the
+    flag is already present (e.g. conftest.py or a sweep env set it). Any
+    pre-existing XLA_FLAGS (or the legacy ``_EXTRA_XLA_FLAGS`` base) are
+    preserved, not clobbered.
+    """
+    if "jax" in sys.modules:
+        return
+    flags = os.environ.get("XLA_FLAGS", "") or os.environ.get(
+        "_EXTRA_XLA_FLAGS", "")
+    if "--xla_force_host_platform_device_count" not in flags:
+        flags = f"{flags} --xla_force_host_platform_device_count={n}"
+    os.environ["XLA_FLAGS"] = flags.strip()

@@ -6,7 +6,7 @@ Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
         --shape train_4k --mesh pod --out experiments/dryrun.jsonl
 
-The XLA_FLAGS assignment below is the FIRST executable statement — before
+The XLA_FLAGS bootstrap below is the FIRST executable statement — before
 any jax import (device count is locked at first init). REPRO_DRYRUN_DEVICES
 overrides the forced device count (CI smoke runs use 8 with --mesh host);
 when jax is already imported (in-process test usage) the flag is left alone.
@@ -14,15 +14,10 @@ when jax is already imported (in-process test usage) the flag is left alone.
 import os
 import sys
 
-if "jax" not in sys.modules:
-    _host_run = any(
-        a in ("--mesh=host",) or (a == "host" and sys.argv[i - 1] == "--mesh")
-        for i, a in enumerate(sys.argv))
-    _n_dev = os.environ.get("REPRO_DRYRUN_DEVICES",
-                            "8" if _host_run else "512")
-    os.environ["XLA_FLAGS"] = (
-        os.environ.get("_EXTRA_XLA_FLAGS", "")
-        + f" --xla_force_host_platform_device_count={_n_dev}").strip()
+from repro.launch._bootstrap import force_host_devices, mesh_flag
+
+force_host_devices(os.environ.get(
+    "REPRO_DRYRUN_DEVICES", "8" if mesh_flag(sys.argv) == "host" else "512"))
 
 import argparse
 import json

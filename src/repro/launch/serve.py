@@ -1,49 +1,115 @@
-"""Serving driver: batched greedy generation for any assigned architecture.
+"""Serving driver: static / continuous / sharded batched generation.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-780m \
-        --batch 4 --prompt-len 12 --max-new 16
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --engine continuous --mesh host --slots 8 --batch 12 \
+        --arrival-rate 2 --policy fcfs --verify
+
+Engines: ``static`` runs one batch with a slot per request (one admission
+round); ``continuous`` bounds the pool to ``--slots`` and joins/evicts per
+decode step. ``--mesh host`` executes the jitted decode step TP/DP-sharded
+over the host mesh (forcing an 8-device host platform when run from the CLI,
+like launch/dryrun.py). ``--arrival-rate R`` switches to open-loop arrivals:
+request i becomes admissible at decode step i/R; 0 means all arrive at once.
+``--verify`` re-runs the request set on a single-device static engine and
+checks per-request outputs are identical.
 """
-from __future__ import annotations
+import os
+import sys
 
-import argparse
-import json
-import time
+from repro.launch._bootstrap import force_host_devices, mesh_flag
 
-import numpy as np
+if mesh_flag(sys.argv) == "host":
+    force_host_devices(os.environ.get("REPRO_SERVE_DEVICES", "8"))
 
-from repro.configs import ARCH_IDS, get_config
-from repro.serve.engine import Request, ServeEngine
+import jax  # noqa: E402  (lock the device count before any repro import)
+
+import argparse     # noqa: E402
+import dataclasses  # noqa: E402
+import json         # noqa: E402
+
+import numpy as np  # noqa: E402
+
+from repro.configs import ARCH_IDS, get_config                    # noqa: E402
+from repro.serve import ServeEngine, ServeRequest, sharded_engine  # noqa: E402
+
+
+def make_requests(cfg, n: int, prompt_len: int, max_new: int,
+                  arrival_rate: float, seed: int = 0):
+    """Mixed-length request set with optional open-loop arrivals."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n):
+        s = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        arrival = (i / arrival_rate) if arrival_rate > 0 else 0.0
+        reqs.append(ServeRequest(
+            rng.integers(1, cfg.vocab_size, size=s).astype(np.int32),
+            max_new_tokens=max_new, arrival_time=arrival))
+    return reqs
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCH_IDS)
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "continuous"])
+    ap.add_argument("--mesh", default="single", choices=["single", "host"])
+    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "sjf"])
+    ap.add_argument("--batch", type=int, default=8,
+                    help="number of requests in the set")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="cache-pool slots (continuous engine)")
+    ap.add_argument("--prompt-len", type=int, default=8,
+                    help="max prompt length (lengths are mixed in [len/2, len])")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop arrivals per decode step (0 = all at once)")
+    ap.add_argument("--verify", action="store_true",
+                    help="check outputs against a single-device static engine")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=args.preset == "smoke")
-    engine = ServeEngine(cfg, max_len=args.max_len)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rng.integers(1, cfg.vocab_size,
-                                 size=args.prompt_len).astype(np.int32),
-                    max_new_tokens=args.max_new)
-            for _ in range(args.batch)]
-    t0 = time.perf_counter()
-    out = engine.generate(reqs)
-    dt = time.perf_counter() - t0
-    total_new = sum(len(r.output) for r in out)
-    print(json.dumps({
+    n_slots = args.slots if args.engine == "continuous" else None
+
+    if args.mesh == "host":
+        engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
+                                max_len=args.max_len, policy=args.policy)
+    else:
+        engine = ServeEngine(cfg, max_len=args.max_len, n_slots=n_slots,
+                             policy=args.policy)
+
+    reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
+                         args.arrival_rate)
+    out, stats = engine.run(reqs)
+
+    record = {
         "arch": cfg.arch_id,
-        "batch": args.batch,
-        "new_tokens": total_new,
-        "wall_s": round(dt, 2),
-        "tokens_per_s": round(total_new / dt, 1),
+        "engine": args.engine,
+        "mesh": args.mesh,
+        "policy": args.policy,
+        "n_devices": jax.device_count(),
+        "slots": n_slots or args.batch,
+        **dataclasses.asdict(stats),
         "sample_output": out[0].output[:8],
-    }, indent=2))
+    }
+
+    if args.verify:
+        ref_engine = ServeEngine(cfg, max_len=args.max_len)
+        ref = [ServeRequest(r.prompt.copy(), max_new_tokens=r.max_new_tokens)
+               for r in out]
+        ref, _ = ref_engine.run(ref)
+        mismatches = [i for i, (a, b) in enumerate(zip(ref, out))
+                      if a.output != b.output]
+        record["verified"] = not mismatches
+        if mismatches:
+            record["mismatched_requests"] = mismatches
+            print(json.dumps(record, indent=2))
+            raise SystemExit(
+                f"FAIL: {len(mismatches)} request(s) diverged from the "
+                f"single-device static engine")
+
+    print(json.dumps(record, indent=2))
 
 
 if __name__ == "__main__":

@@ -157,8 +157,11 @@ def decode_step(cfg, params, cache, tokens, pos):
     b = tokens.shape[0]
     x = L.embed(params["emb"], cfg, tokens)
     pe = L.sinusoidal_pos_emb(cache["k"].shape[2], cfg.d_model).astype(x.dtype)
-    x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = L.decode_positions(b, pos)
+    if jnp.asarray(pos).ndim == 0:
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+    else:
+        x = x + jnp.take(pe, positions[:, 0], axis=0)[:, None, :]
 
     def body(x, scanned):
         p, ck_, cv_, xk, xv = scanned

@@ -113,7 +113,7 @@ def _mamba_decode(cfg, x, scanned):
 def decode_step(cfg, params, cache, tokens, pos):
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = L.decode_positions(b, pos)
     every, groups, trailing = _split(cfg)
     w0 = jnp.int32(0)
 

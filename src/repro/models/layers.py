@@ -118,7 +118,29 @@ def init_attention(key, cfg, dtype) -> dict:
     return p
 
 
-def _qkv(p, cfg, x):
+#: sentinel for "derive the attention scheme locally" (legacy call sites);
+#: layer entry points thread ONE scheme per layer instead (ROADMAP item #4).
+_DERIVE = object()
+
+
+def plan_attention_scheme(cfg, b: int, s: int, kv_len: int):
+    """Derive the single attention scheme for one layer call.
+
+    The head count handed to ``attention_scheme`` is the one the score einsum
+    actually contracts over — pre-repeat KV heads under ``gqa_no_repeat``,
+    effective (padded) Q heads otherwise — and ``kv_len`` is the attended
+    length (cache length in decode, sequence length in prefill). Deriving
+    once here and passing the scheme down guarantees the q/kv layouts agree
+    at every constraint site within the layer.
+    """
+    from repro.dist.sharding import attention_scheme
+    nh, nkv = cfg.n_heads_eff, cfg.n_kv_heads
+    g = nh // max(nkv, 1)
+    heads = nkv if (cfg.gqa_no_repeat and g > 1) else nh
+    return attention_scheme(b, s, heads, kv_len)
+
+
+def _qkv(p, cfg, x, scheme=_DERIVE):
     from repro.dist.sharding import attention_scheme, current_rules, shard_spec
     b, s, _ = x.shape
     hd, nh, nkv = cfg.resolved_head_dim, cfg.n_heads_eff, cfg.n_kv_heads
@@ -133,7 +155,8 @@ def _qkv(p, cfg, x):
     # Constrain IMMEDIATELY after the head reshape: downstream elementwise ops
     # (RoPE) must run on the final layout, or SPMD inserts replicate-reshard
     # pairs ("involuntary full rematerialization").
-    scheme = attention_scheme(b, s, nh, s)
+    if scheme is _DERIVE:
+        scheme = attention_scheme(b, s, nh, s)
     rules = current_rules()
     if scheme is not None:
         q = shard_spec(q, scheme["q"])
@@ -159,15 +182,18 @@ def attention_weights_mask(q_pos, k_pos, *, causal: bool,
 
 
 def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
-        window: int = 0, no_repeat: bool = False):
+        window: int = 0, no_repeat: bool = False, scheme=_DERIVE):
     """Grouped-query attention core.
 
-    q: [B, Sq, Hq, D], k/v: [B, Sk, Hkv, D], mask broadcastable to [Sq, Sk].
+    q: [B, Sq, Hq, D], k/v: [B, Sk, Hkv, D], mask broadcastable to [Sq, Sk]
+    (or [B, 1, 1, Sk] for per-row decode positions).
 
     KV heads are repeated to the full head count before the score einsum so
     the head dimension shards cleanly over the 'model' mesh axis (GQA head
     counts rarely divide it). The sharding scheme (heads / extra-batch /
-    q-seq) is chosen per shape — see dist.sharding.attention_scheme.
+    q-seq) is threaded in from the layer entry point (one scheme per layer);
+    legacy callers that omit it get a locally derived one — see
+    dist.sharding.attention_scheme.
     """
     from repro.dist.sharding import attention_scheme, shard_spec
 
@@ -181,7 +207,8 @@ def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
     if g > 1 and not no_repeat:
         k = jnp.repeat(k, g, axis=2)
         v = jnp.repeat(v, g, axis=2)
-    scheme = attention_scheme(b, sq, hkv if no_repeat else hq, k.shape[1])
+    if scheme is _DERIVE:
+        scheme = attention_scheme(b, sq, hkv if no_repeat else hq, k.shape[1])
     if scheme is not None:
         k = shard_spec(k, scheme["kv"])
         v = shard_spec(v, scheme["kv"])
@@ -196,7 +223,12 @@ def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
                 qs[0], qs[1], qs[2], None, None))
         logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
         if mask is not None:
-            m5 = mask if mask.ndim >= 3 else mask[None]
+            if mask.ndim == 4:                      # [B, 1|H, 1|Q, K]
+                m5 = mask[:, :, None]
+            elif mask.ndim >= 3:
+                m5 = mask
+            else:
+                m5 = mask[None]
             logits = jnp.where(m5, logits, -1e30)
         probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
         out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
@@ -218,6 +250,32 @@ def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
     return out
 
 
+def decode_positions(b: int, pos) -> jax.Array:
+    """[B, 1] position matrix for a decode step. ``pos`` is a scalar (all
+    rows at the same position — static batching, the dry-run's serve step) or
+    an int32 [B] vector (per-slot positions — continuous batching)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return jnp.full((b, 1), pos, jnp.int32)
+    return pos[:, None]
+
+
+def update_kv_cache(ck, cv, k, v, cache_pos):
+    """Write one decode step's k/v [B, 1, H, D] into the cache [B, S, H, D]
+    at ``cache_pos`` (scalar, or [B] for per-row positions) and return the
+    updated cache plus the validity mask over cache positions."""
+    pos = jnp.asarray(cache_pos)
+    k_pos = jnp.arange(ck.shape[1])
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
+        return ck, cv, k_pos, pos
+    upd = lambda c, u, p_: jax.lax.dynamic_update_slice_in_dim(c, u, p_, axis=0)
+    ck = jax.vmap(upd)(ck, k.astype(ck.dtype), pos)
+    cv = jax.vmap(upd)(cv, v.astype(cv.dtype), pos)
+    return ck, cv, k_pos[None, :], pos[:, None]
+
+
 def attention(p, cfg, x, positions, *, causal: bool = True,
               window: int = 0, kv_cache=None, cache_pos=None,
               cross_kv=None):
@@ -226,32 +284,34 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
     Modes:
       * training / prefill: ``kv_cache is None`` — attend over x itself.
       * decode: ``kv_cache=(k, v)`` with static length S; the current token's
-        k/v is written at ``cache_pos`` and attention spans the cache.
+        k/v is written at ``cache_pos`` (scalar, or [B] per-row positions for
+        continuous batching) and attention spans the cache.
       * cross attention: ``cross_kv=(k, v)`` precomputed from encoder output.
     Returns (out, new_kv_cache_or_None).
     """
     b, s, _ = x.shape
-    q, k, v = _qkv(p, cfg, x)
+    kv_len = (kv_cache[0].shape[1] if kv_cache is not None
+              else cross_kv[0].shape[1] if cross_kv is not None else s)
+    scheme = plan_attention_scheme(cfg, b, s, kv_len)
+    q, k, v = _qkv(p, cfg, x, scheme=scheme)
     new_cache = None
 
     if cross_kv is not None:
         k, v = cross_kv
-        q = q if cfg.pos_emb != "rope" else q
         mask = None
     elif kv_cache is not None:
         ck, cv = kv_cache
         if cfg.pos_emb == "rope":
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        ck, cv, k_pos, cpos = update_kv_cache(ck, cv, k, v, cache_pos)
         new_cache = (ck, cv)
         k, v = ck, cv
-        k_pos = jnp.arange(k.shape[1])
-        valid = k_pos <= cache_pos
+        valid = k_pos <= cpos
         if window:
-            valid &= k_pos > cache_pos - window
-        mask = valid[None, :]                       # [1, Sk]
+            valid &= k_pos > cpos - window
+        # [1, Sk] shared-position mask, or [B, 1, 1, Sk] per-row mask
+        mask = valid[None, :] if valid.ndim == 1 else valid[:, None, None, :]
         k = shard(k, "batch", "kv_seq", None, None)
         v = shard(v, "batch", "kv_seq", None, None)
     else:
@@ -264,7 +324,8 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
 
     use_pl = cfg.use_pallas and kv_cache is None and cross_kv is None and causal
     out = mha(q, k, v, None if use_pl else mask, use_pallas=use_pl,
-              causal=causal, window=window, no_repeat=cfg.gqa_no_repeat)
+              causal=causal, window=window, no_repeat=cfg.gqa_no_repeat,
+              scheme=scheme)
     out = out.reshape(b, s, -1) @ p["wo"]
     return out, new_cache
 

@@ -136,7 +136,13 @@ def _layer(cfg, p, x, positions, kv_cache=None, cache_pos=None):
     return shard(x, "batch", None, None), new_cache, aux
 
 
-def forward(cfg, params, tokens, return_aux=False):
+def forward(cfg, params, tokens, return_aux=False, return_cache=False):
+    """tokens: [B, S] int32 -> logits [B, S, V].
+
+    ``return_cache`` captures the per-layer post-rope (k, v) stacks so serving
+    can prefill MoE in ONE forward pass (like dense/vlm) instead of the
+    O(S)-step decode scan.
+    """
     x = L.embed(params["emb"], cfg, tokens)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
@@ -152,11 +158,16 @@ def forward(cfg, params, tokens, return_aux=False):
                   jax.checkpoint_policies.nothing_saveable)
         body = jax.checkpoint(body, policy=policy)
 
-    (x, aux_sum), _ = L.scan_layers(cfg, body, (x, jnp.float32(0.0)), params["layers"])
+    (x, aux_sum), caches = L.scan_layers(cfg, body, (x, jnp.float32(0.0)),
+                                         params["layers"])
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["emb"], cfg, x)
+    if return_aux and return_cache:
+        return logits, aux_sum / cfg.n_layers, caches
     if return_aux:
         return logits, aux_sum / cfg.n_layers
+    if return_cache:
+        return logits, caches
     return logits
 
 
@@ -172,7 +183,7 @@ init_cache = T.init_cache
 def decode_step(cfg, params, cache, tokens, pos):
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = L.decode_positions(b, pos)
 
     def body(x, scanned):
         p, ck, cv = scanned

@@ -68,21 +68,22 @@ def _layer(cfg, p, x, positions, window, kv_cache=None, cache_pos=None):
 def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos):
     """Attention with a *traced* window size (for scanned local/global mix)."""
     b, s, _ = x.shape
-    q, k, v = L._qkv(p, cfg, x)
+    kv_len = kv_cache[0].shape[1] if kv_cache is not None else s
+    scheme = L.plan_attention_scheme(cfg, b, s, kv_len)
+    q, k, v = L._qkv(p, cfg, x, scheme=scheme)
     if cfg.pos_emb == "rope":
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        ck, cv, k_pos, cpos = L.update_kv_cache(ck, cv, k, v, cache_pos)
         new_cache = (ck, cv)
         k, v = ck, cv
-        k_pos = jnp.arange(k.shape[1])
-        mask = k_pos <= cache_pos
-        mask &= (window == 0) | (k_pos > cache_pos - window)
-        mask = mask[None, :]
+        mask = k_pos <= cpos
+        mask &= (window == 0) | (k_pos > cpos - window)
+        # [1, Sk] shared-position mask, or [B, 1, 1, Sk] per-row mask
+        mask = mask[None, :] if mask.ndim == 1 else mask[:, None, None, :]
         k = shard(k, "batch", "kv_seq", None, None)
         v = shard(v, "batch", "kv_seq", None, None)
     else:
@@ -90,7 +91,7 @@ def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos):
         mask = pos[:, None] >= pos[None, :]
         mask &= (window == 0) | (pos[:, None] - pos[None, :] < window)
         new_cache = (k, v)
-    out = L.mha(q, k, v, mask, no_repeat=cfg.gqa_no_repeat)
+    out = L.mha(q, k, v, mask, no_repeat=cfg.gqa_no_repeat, scheme=scheme)
     out = out.reshape(b, s, -1) @ p["wo"]
     return out, new_cache
 
@@ -275,13 +276,14 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
 
 
 def decode_step(cfg, params, cache, tokens, pos):
-    """One decode step. tokens: [B, 1]; pos: scalar int32 (current position).
+    """One decode step. tokens: [B, 1]; pos: scalar int32 (all rows at the
+    same position) or int32 [B] (per-row positions, continuous batching).
 
     Returns (logits [B, 1, V], new_cache).
     """
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    positions = L.decode_positions(b, pos)
     windows = layer_windows(cfg)
 
     def body(x, scanned):

@@ -1,0 +1,106 @@
+"""Pooled decode-cache with per-slot alloc/free.
+
+One padded cache buffer (the model's ``init_cache(n_slots, max_len)`` pytree)
+is shared by all in-flight requests; each request owns one *slot* — one index
+along the batch dimension of every leaf. Requests of different lengths
+coexist because each slot keeps its own write position (threaded through the
+per-row ``pos`` vector of ``decode_step``) and the decode mask only spans
+``[0, pos]`` per row.
+
+The batch axis is not the same dimension in every leaf (transformer KV stacks
+are ``[L, B, S, kv, hd]`` — axis 1 — while zamba2's grouped mamba states are
+``[G, E, B, ...]`` — axis 2), so the pool infers each leaf's batch axis once
+at construction by diffing the shapes of two ``eval_shape`` probes with
+different batch sizes. ``write`` replaces an entire slot row, so a recycled
+slot never sees its previous tenant's state.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _batch_axis(shape_a, shape_b) -> int:
+    """Index of the (single) differing dimension between two probe shapes."""
+    diff = [i for i, (a, b) in enumerate(zip(shape_a.shape, shape_b.shape))
+            if a != b]
+    if len(diff) != 1:
+        raise ValueError(
+            f"cannot locate batch axis: {shape_a.shape} vs {shape_b.shape}")
+    return diff[0]
+
+
+class CachePool:
+    """Slot-managed decode cache over a model's ``init_cache`` pytree.
+
+    Slots are recycled FIFO: freed slots go to the back of the free queue, so
+    a request never lands in the most-recently-vacated row while its previous
+    tenant's final decode step may still be in flight.
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int):
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        probe_a = jax.eval_shape(lambda: model.init_cache(3, max_len))
+        probe_b = jax.eval_shape(lambda: model.init_cache(5, max_len))
+        self.batch_axes = jax.tree_util.tree_map(_batch_axis, probe_a, probe_b)
+        self.buffers = model.init_cache(n_slots, max_len)
+        self._free = deque(range(n_slots))
+        self._in_use: set = set()
+
+    # -- slot management -----------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        """Claim a slot; None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.popleft()
+        self._in_use.add(slot)
+        return slot
+
+    def free(self, slot: int) -> None:
+        if slot not in self._in_use:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._in_use.remove(slot)
+        self._free.append(slot)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self):
+        return frozenset(self._in_use)
+
+    @property
+    def utilization(self) -> float:
+        return len(self._in_use) / self.n_slots
+
+    # -- buffer access ---------------------------------------------------------
+    def write(self, slot: int, row_cache) -> None:
+        """Install a batch-1 cache pytree (same ``max_len``) into ``slot``.
+
+        Replaces the entire slot row of every leaf, so stale state from a
+        previous occupant can never leak into the new request's decode.
+        """
+        if slot not in self._in_use:
+            raise ValueError(f"slot {slot} is not allocated")
+
+        def put(buf, row, ax):
+            sel = (slice(None),) * ax
+            return buf.at[sel + (slot,)].set(
+                jnp.asarray(row)[sel + (0,)].astype(buf.dtype))
+
+        self.buffers = jax.tree_util.tree_map(put, self.buffers, row_cache,
+                                              self.batch_axes)
+
+    def read_slot(self, slot: int):
+        """The slot's cache row as a batch-1 pytree (tests / debugging)."""
+        def take(buf, ax):
+            sel = (slice(None),) * ax
+            return buf[sel + (slice(slot, slot + 1),)]
+
+        return jax.tree_util.tree_map(take, self.buffers, self.batch_axes)

@@ -1,15 +1,37 @@
-"""Batched serving engine: prefill + greedy decode over the unified model API.
+"""Serving engine: prefill + greedy decode over the unified model API.
 
-Attention-family models prefill with one full forward pass (capturing the
-per-layer K/V via ``return_cache``); recurrent families (ssm/hybrid) prefill
-by scanning decode steps (their state is O(1), the scan is jit-compiled once).
-Static batching: all requests in a batch share a padded prompt buffer — the
-serve_step lowered by the dry-run is exactly `engine.decode_step`.
+The engine sits on top of the serve subsystem's two mechanisms:
+
+  * ``cache.CachePool``   — one padded cache buffer, per-slot alloc/free.
+  * ``scheduler.ContinuousScheduler`` — admission by slot availability,
+    per-step join/evict, FCFS/SJF queue ordering.
+
+Every mode is the same engine loop. *Static* batching is the degenerate
+scheduler configuration (all requests arrive at step 0 into a pool with one
+slot per request, so there is exactly one admission round and no mid-flight
+join/evict); *continuous* batching bounds the pool and lets the scheduler
+join/evict per step. TP/DP-sharded decode is the same loop again with a
+``sharded.ServeSharding`` plan installed (see serve/sharded.py).
+
+Prefill: attention-family models (dense / vlm / moe) run ONE full forward
+pass capturing the per-layer K/V via ``return_cache``; recurrent families
+(ssm / hybrid / encdec) scan decode steps (their state is O(1); the scan is
+jit-compiled once). Prefill is per-request at the exact prompt length — no
+cross-request padding — so a request's output never depends on what it was
+batched with, which is what makes continuous and static batching produce
+identical per-request outputs.
+
+Decode: one jitted ``decode_step`` over the whole pool with a per-row ``pos``
+vector (each slot at its own sequence position). Inactive slots decode
+garbage that is never read and is fully overwritten at the next admission.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+import contextlib
+import math
+import time
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,95 +39,184 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
+from repro.serve.cache import CachePool
+from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+
+#: back-compat alias — the original single-file engine exported ``Request``
+Request = ServeRequest
+
+_ATTN_PREFILL_FAMILIES = ("dense", "vlm", "moe")
 
 
 @dataclass
-class Request:
-    prompt: np.ndarray                 # [S] int32
-    max_new_tokens: int = 16
-    output: List[int] = field(default_factory=list)
-
-    @property
-    def done(self) -> bool:
-        return len(self.output) >= self.max_new_tokens
+class ServeStats:
+    n_requests: int
+    new_tokens: int
+    steps: int
+    wall_s: float
+    tokens_per_s: float
+    slot_utilization: float           # mean active/n_slots over decode steps
+    mean_latency_steps: float
+    p95_latency_steps: float
+    mean_latency_s: float
 
 
 class ServeEngine:
+    """Greedy serving engine for any architecture family.
+
+    ``n_slots=None`` (default) sizes the pool to the request set at each
+    ``run``/``generate`` call — classic static batching. A fixed ``n_slots``
+    bounds the pool and turns on continuous batching: the scheduler queues
+    the overflow and joins/evicts requests per decode step.
+    """
+
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
-                 rng=None):
+                 rng=None, n_slots: Optional[int] = None,
+                 policy: str = "fcfs", sharding=None):
         self.cfg = cfg
-        self.model = build_model(cfg)
-        rng = rng if rng is not None else jax.random.key(0)
-        self.params = params if params is not None else self.model.init(rng)
+        self.model: Model = build_model(cfg)
         self.max_len = max_len
-        self._decode = jax.jit(self.model.decode_step)
+        self.n_slots = n_slots
+        self.policy = policy
+        self.sharding = sharding
+        rng = rng if rng is not None else jax.random.key(0)
+        with self._rules():
+            self.params = (params if params is not None
+                           else self.model.init(rng))
+        if sharding is not None:
+            self.params = jax.device_put(self.params, sharding.param_sharding)
+            self._decode = jax.jit(
+                self.model.decode_step,
+                in_shardings=(sharding.param_sharding,
+                              sharding.cache_sharding,
+                              sharding.token_sharding,
+                              sharding.pos_sharding),
+                out_shardings=(None, sharding.cache_sharding))
+        else:
+            self._decode = jax.jit(self.model.decode_step)
+        self._prefill = jax.jit(self._prefill_fn())
+
+    def _rules(self):
+        """Logical-axis rules context (no-op off-mesh / unsharded)."""
+        return (self.sharding.rules() if self.sharding is not None
+                else contextlib.nullcontext())
 
     # -- prefill ---------------------------------------------------------------
-    def _prefill_attention(self, tokens: jnp.ndarray):
-        """Dense/MoE/VLM: full forward capturing per-layer (k, v)."""
-        from repro.models import transformer as T
-        b, s = tokens.shape
-        logits, caches = T.forward(self.cfg, self.params, tokens,
-                                   return_cache=True)
-        k, v = caches                              # [L, B, S, kv, hd]
-        pad = self.max_len - s
-        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
-        return logits, {"k": k, "v": v}
+    def _prefill_fn(self):
+        """(params, tokens[B, S]) -> (last logits [B, 1, V], cache pytree)."""
+        cfg, model, max_len = self.cfg, self.model, self.max_len
 
-    def _prefill_scan(self, tokens: jnp.ndarray):
-        """Recurrent prefill: scan decode steps (ssm / hybrid / encdec)."""
-        b, s = tokens.shape
-        cache = self.model.init_cache(b, self.max_len)
+        if cfg.family in _ATTN_PREFILL_FAMILIES:
+            def prefill(params, tokens):
+                """One-pass attention prefill via the ``return_cache`` hook."""
+                logits, (k, v) = model.module.forward(cfg, params, tokens,
+                                                      return_cache=True)
+                pad = max_len - tokens.shape[1]
+                widths = ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))
+                return logits[:, -1:], {"k": jnp.pad(k, widths),
+                                        "v": jnp.pad(v, widths)}
+            return prefill
 
-        def body(carry, t):
-            cache, _ = carry
-            logits, cache = self.model.decode_step(
-                self.params, cache, tokens[:, t][:, None], t)
-            return (cache, logits), None
+        def prefill(params, tokens):
+            """Recurrent prefill: scan decode steps (O(1) state per step)."""
+            b, s = tokens.shape
+            cache = model.init_cache(b, max_len)
+            logits0 = jnp.zeros((b, 1, cfg.vocab_size), jnp.dtype(cfg.dtype))
 
-        (cache, logits), _ = jax.lax.scan(
-            lambda c, t: body(c, t), (cache, jnp.zeros(
-                (b, 1, self.cfg.vocab_size), jnp.float32)),
-            jnp.arange(s))
-        return logits, cache
+            def body(carry, t):
+                cache, _ = carry
+                logits, cache = model.decode_step(
+                    params, cache, tokens[:, t][:, None], t)
+                return (cache, logits), None
 
-    def prefill(self, tokens: jnp.ndarray):
-        fam = self.cfg.family
-        if fam in ("dense", "vlm"):
-            return self._prefill_attention(tokens)
-        if fam == "moe":
-            # MoE shares the dense cache layout; forward has no return_cache
-            # hook, so prefill via the scan path.
-            return self._prefill_scan(tokens)
-        return self._prefill_scan(tokens)
+            (cache, logits), _ = jax.lax.scan(body, (cache, logits0),
+                                              jnp.arange(s))
+            return logits, cache
+        return prefill
 
-    # -- generation --------------------------------------------------------------
-    def generate(self, requests: List[Request]) -> List[Request]:
-        """Run a static batch of requests to completion (greedy)."""
-        b = len(requests)
-        prompt_len = max(len(r.prompt) for r in requests)
-        toks = np.zeros((b, prompt_len), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, prompt_len - len(r.prompt):] = r.prompt     # left-pad
-        toks = jnp.asarray(toks)
+    # -- the engine loop ---------------------------------------------------------
+    def run(self, requests: List[ServeRequest]
+            ) -> Tuple[List[ServeRequest], ServeStats]:
+        """Serve ``requests`` to completion; returns (requests, stats)."""
+        reqs = list(requests)
+        n_slots = self.n_slots if self.n_slots else max(len(reqs), 1)
+        t0 = time.perf_counter()
+        with self._rules():
+            pool = CachePool(self.model, n_slots, self.max_len)
+            if self.sharding is not None:
+                pool.buffers = jax.device_put(pool.buffers,
+                                              self.sharding.cache_sharding)
+            sched = ContinuousScheduler(pool, self.policy)
+            for i, r in enumerate(reqs):
+                r.job_id = i
+                sched.submit(r)
 
-        logits, cache = self.prefill(toks)
-        last = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            last = np.zeros((n_slots, 1), np.int32)
+            pos = np.zeros((n_slots,), np.int32)
+            util_acc, steps = 0.0, 0
 
-        max_new = max(r.max_new_tokens for r in requests)
-        pos = prompt_len
-        for step in range(max_new):
-            for i, r in enumerate(requests):
-                if not r.done:
-                    r.output.append(int(last[i]))
-            if all(r.done for r in requests) or pos >= self.max_len:
-                break
-            logits, cache = self._decode(self.params, cache,
-                                         last[:, None], jnp.int32(pos))
-            last = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-            pos += 1
-        return requests
+            while sched.has_work:
+                sched.evict_finished()
+                admitted = sched.admit()
+                for r in admitted:
+                    tokens = jnp.asarray(
+                        np.asarray(r.prompt, np.int32))[None, :]
+                    logits, row = self._prefill(self.params, tokens)
+                    pool.write(r.slot, row)
+                    tok = int(jnp.argmax(logits[0, -1]))
+                    r.output.append(tok)
+                    last[r.slot, 0] = tok
+                    pos[r.slot] = len(r.prompt)
+                sched.evict_finished()       # satisfied by prefill alone
+                if not sched.active:
+                    nxt = sched.next_arrival()
+                    if nxt is None:
+                        break
+                    sched.step = max(sched.step + 1, int(math.ceil(nxt)))
+                    continue
+
+                # pool.write's eager scatter loses the NamedSharding layout;
+                # restore it only on rounds that actually admitted (decode's
+                # out_shardings keeps the cache correctly sharded otherwise).
+                if self.sharding is not None and admitted:
+                    pool.buffers = jax.device_put(
+                        pool.buffers, self.sharding.cache_sharding)
+                logits, pool.buffers = self._decode(
+                    self.params, pool.buffers, jnp.asarray(last),
+                    jnp.asarray(pos))
+                nxt_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
+                                     np.int32)
+                for slot, r in sched.active.items():
+                    r.output.append(int(nxt_tok[slot]))
+                    last[slot, 0] = nxt_tok[slot]
+                    pos[slot] += 1
+                util_acc += len(sched.active) / n_slots
+                steps += 1
+                sched.step += 1
+            sched.evict_finished()
+
+        wall = time.perf_counter() - t0
+        new_tokens = sum(len(r.output) for r in reqs)
+        lat_steps = [r.latency_steps for r in reqs
+                     if r.latency_steps is not None]
+        lat_wall = [r.latency_s for r in reqs if r.latency_s is not None]
+        stats = ServeStats(
+            n_requests=len(reqs),
+            new_tokens=new_tokens,
+            steps=steps,
+            wall_s=wall,
+            tokens_per_s=new_tokens / wall if wall > 0 else 0.0,
+            slot_utilization=util_acc / steps if steps else 0.0,
+            mean_latency_steps=float(np.mean(lat_steps)) if lat_steps else 0.0,
+            p95_latency_steps=(float(np.percentile(lat_steps, 95))
+                               if lat_steps else 0.0),
+            mean_latency_s=float(np.mean(lat_wall)) if lat_wall else 0.0,
+        )
+        return reqs, stats
+
+    def generate(self, requests: List[ServeRequest]) -> List[ServeRequest]:
+        """Run a batch of requests to completion (greedy); returns them."""
+        return self.run(requests)[0]
 
 
 def serve_step_fn(cfg: ArchConfig):

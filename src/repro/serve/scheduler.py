@@ -1,0 +1,128 @@
+"""Continuous-batching scheduler: a request queue with admission by slot
+availability and per-step join/evict of finished requests.
+
+Ordering reuses the ``core.policies`` abstractions (a policy only ORDERS the
+queue — the same separation Synergy draws for training jobs): FCFS maps onto
+``policies.FIFO`` (arrival order) and SJF onto ``policies.SRTF`` (least
+remaining work = prompt + generation budget still owed). ``ServeRequest``
+exposes the ``arrival_time`` / ``remaining`` / ``job_id`` attributes those
+policies sort by.
+
+The clock is the engine's decode-step counter: open-loop arrival processes
+set ``arrival_time`` in steps and a request becomes admissible once the
+engine clock passes it. Static batching is the degenerate configuration —
+every request arrives at step 0 and the pool has one slot per request, so the
+first admission round admits everything and no join/evict ever happens
+mid-flight.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.policies import FIFO, SRTF, Policy
+from repro.serve.cache import CachePool
+
+#: serve-queue ordering policies (names per the serving literature)
+SERVE_POLICIES = {"fcfs": FIFO, "sjf": SRTF}
+
+
+@dataclass(eq=False)                   # identity equality: prompts are arrays
+class ServeRequest:
+    prompt: np.ndarray                 # [S] int32
+    max_new_tokens: int = 16
+    job_id: int = 0
+    arrival_time: float = 0.0          # engine decode-step clock
+    output: List[int] = field(default_factory=list)
+    slot: Optional[int] = None
+    admitted_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    # wall clocks: t_arrived is stamped when the engine clock first passes
+    # arrival_time (NOT at admission), so latency_s includes queue wait.
+    t_arrived: Optional[float] = None
+    t_admitted: Optional[float] = None
+    t_finished: Optional[float] = None
+
+    @property
+    def done(self) -> bool:
+        return len(self.output) >= self.max_new_tokens
+
+    @property
+    def remaining(self) -> float:
+        """Work still owed (SJF key): prompt prefill + tokens left."""
+        return float(len(self.prompt) + self.max_new_tokens - len(self.output))
+
+    @property
+    def latency_steps(self) -> Optional[float]:
+        if self.finished_at is None:
+            return None
+        return self.finished_at - self.arrival_time
+
+    @property
+    def latency_s(self) -> Optional[float]:
+        """Wall seconds from becoming admissible to finishing (incl. queue)."""
+        if self.t_finished is None or self.t_arrived is None:
+            return None
+        return self.t_finished - self.t_arrived
+
+
+class ContinuousScheduler:
+    """Admission + eviction over a ``CachePool``, ordered by a queue policy."""
+
+    def __init__(self, pool: CachePool, policy: str = "fcfs"):
+        if policy not in SERVE_POLICIES:
+            raise KeyError(f"unknown serve policy {policy!r}; "
+                           f"known: {sorted(SERVE_POLICIES)}")
+        self.pool = pool
+        self.policy: Policy = SERVE_POLICIES[policy]()
+        self.waiting: List[ServeRequest] = []
+        self.active: Dict[int, ServeRequest] = {}
+        self.step: int = 0
+
+    def submit(self, req: ServeRequest) -> None:
+        if len(req.prompt) + req.max_new_tokens > self.pool.max_len:
+            raise ValueError(
+                f"request needs {len(req.prompt) + req.max_new_tokens} cache "
+                f"positions but the pool holds {self.pool.max_len}")
+        self.waiting.append(req)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.active)
+
+    def next_arrival(self) -> Optional[float]:
+        return min((r.arrival_time for r in self.waiting), default=None)
+
+    def admit(self) -> List[ServeRequest]:
+        """Admit policy-ordered admissible requests while slots are free."""
+        ready = [r for r in self.waiting if r.arrival_time <= self.step]
+        now = time.perf_counter()
+        for r in ready:
+            if r.t_arrived is None:
+                r.t_arrived = now
+        admitted = []
+        for req in self.policy.order(ready, float(self.step)):
+            slot = self.pool.alloc()
+            if slot is None:
+                break
+            req.slot = slot
+            req.admitted_at = float(self.step)
+            req.t_admitted = time.perf_counter()
+            self.active[slot] = req
+            self.waiting.remove(req)
+            admitted.append(req)
+        return admitted
+
+    def evict_finished(self) -> List[ServeRequest]:
+        """Release slots of finished requests (the per-step evict half)."""
+        done = [r for r in self.active.values() if r.done]
+        for req in done:
+            req.finished_at = float(self.step)
+            req.t_finished = time.perf_counter()
+            self.pool.free(req.slot)
+            del self.active[req.slot]
+            req.slot = None
+        return done

@@ -1,0 +1,94 @@
+"""TP/DP-sharded serving: run the engine under ``repro.dist.axis_rules``.
+
+A ``ServeSharding`` plan bundles everything the engine needs to execute its
+jitted ``decode_step`` SPMD-sharded on a device mesh:
+
+  * the mesh (default: ``launch.mesh.make_host_mesh()`` — the 8-device host
+    platform in CI, real accelerators in production),
+  * the production logical-axis rules table (with the dry-run's small-KV-head
+    retarget: ``kv_seq -> "model"`` when the KV head count does not divide
+    the model axis),
+  * NamedShardings for params (``param_pspecs``), the pooled decode cache
+    (``launch.dryrun.cache_pspecs`` — the same specs the multi-pod dry-run
+    lowers against), and the per-step token/position vectors.
+
+The engine enters ``plan.rules()`` around tracing so every ``shard``/
+``shard_spec``/``attention_scheme`` constraint inside the model is live; the
+jitted decode step is thereby the same fn the dry-run lowers, now actually
+executing over the mesh.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.dist import sharding as shd
+from repro.launch.mesh import axis_sizes, make_host_mesh
+from repro.models.api import cache_specs, params_specs
+
+
+@dataclass
+class ServeSharding:
+    """Mesh + rules table + NamedShardings for one (cfg, n_slots, max_len)."""
+    mesh: object
+    table: dict
+    param_sharding: object
+    cache_sharding: object
+    token_sharding: NamedSharding
+    pos_sharding: NamedSharding
+    cache_pspec: object = field(default=None, repr=False)
+
+    def rules(self):
+        """Context manager installing the logical-axis rules for tracing."""
+        return shd.axis_rules(self.mesh, self.table)
+
+
+def make_serve_sharding(cfg, n_slots: int, max_len: int,
+                        mesh=None) -> ServeSharding:
+    """Build the sharding plan for a pooled serve engine.
+
+    The cache specs come from ``launch.dryrun.cache_pspecs`` so serve and
+    dry-run agree on the decode-cache layout; the batch (slot) dimension
+    shards over 'data' when ``n_slots`` divides it, model-parallel axes per
+    family as in DESIGN.md §7.
+    """
+    # jax is imported above, so repro.launch.dryrun's XLA_FLAGS preamble
+    # (which must only run before first jax init) is a guaranteed no-op here.
+    from repro.launch.dryrun import cache_pspecs
+
+    mesh = mesh if mesh is not None else make_host_mesh()
+    sizes = axis_sizes(mesh)
+    table = shd.production_rules_table("pod" in mesh.axis_names)
+    if cfg.n_kv_heads and cfg.n_kv_heads % sizes["model"] != 0:
+        table["kv_seq"] = "model"
+
+    with shd.axis_rules(mesh, table) as rules:
+        pshape = params_specs(cfg)
+        pspec = shd.param_pspecs(pshape, rules)
+
+    cshape = cache_specs(cfg, n_slots, max_len)
+    cspec = cache_pspecs(cfg, cshape, mesh, seq_shard=False, batch=n_slots)
+
+    b_ax = "data" if n_slots % sizes.get("data", 1) == 0 else None
+    return ServeSharding(
+        mesh=mesh,
+        table=table,
+        param_sharding=shd.named(pspec, mesh),
+        cache_sharding=shd.named(cspec, mesh),
+        token_sharding=NamedSharding(mesh, P(b_ax, None)),
+        pos_sharding=NamedSharding(mesh, P(b_ax)),
+        cache_pspec=cspec,
+    )
+
+
+def sharded_engine(cfg, *, n_slots: int = 8, max_len: int = 256,
+                   policy: str = "fcfs", params=None, rng=None, mesh=None):
+    """Convenience constructor: a continuous-batching engine whose decode
+    step executes TP/DP-sharded over ``mesh`` (default: the host mesh)."""
+    from repro.serve.engine import ServeEngine
+
+    plan = make_serve_sharding(cfg, n_slots, max_len, mesh=mesh)
+    return ServeEngine(cfg, params=params, max_len=max_len, rng=rng,
+                       n_slots=n_slots, policy=policy, sharding=plan)
