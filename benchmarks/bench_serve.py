@@ -1,6 +1,7 @@
 """Serve engines — static vs continuous vs sharded-continuous tokens/s for an
-attention-family and an ssm-family architecture (smoke shapes; set
-BENCH_FULL=1 for a larger request set)."""
+attention-family and an ssm-family architecture, plus paged-vs-contiguous
+admission density at mixed prompt lengths (smoke shapes; set BENCH_FULL=1
+for a larger request set)."""
 from __future__ import annotations
 
 import jax
@@ -53,4 +54,38 @@ def run():
         row = _row(f"serve/sharded-continuous/{arch}", st)
         row["derived"] += f" ndev={jax.device_count()}"
         rows.append(row)
+    rows.extend(_paged_admission_rows(n, max_new))
+    return rows
+
+
+def _paged_admission_rows(n, max_new):
+    """Paged vs contiguous admission at mixed prompt lengths on EQUAL token
+    budgets: the contiguous pool spends the budget as few max_len rows, the
+    paged pool as length-proportional blocks — so paged admits the same
+    request set wider (max_active) and finishes in fewer decode steps."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    max_len, block = 64, 8
+    budget = (n // 2) * max_len                  # cache positions
+    reqs = _requests(cfg, n, max_new)            # fresh copies below arrive
+                                                 # at step 0 (closed loop)
+    cont = ServeEngine(cfg, max_len=max_len, n_slots=budget // max_len)
+    _, st = cont.run([ServeRequest(r.prompt.copy(), max_new_tokens=max_new)
+                      for r in reqs])
+    rows = []
+    row = _row(f"serve/admission-contiguous/{arch}", st)
+    row["derived"] += f" max_active={st.max_active} steps={st.steps}"
+    rows.append(row)
+
+    paged = ServeEngine(cfg, max_len=max_len, n_slots=n, cache="paged",
+                        block_size=block, n_blocks=budget // block,
+                        watermark=0.0)
+    _, st = paged.run([ServeRequest(r.prompt.copy(), max_new_tokens=max_new)
+                       for r in reqs])
+    row = _row(f"serve/admission-paged/{arch}", st)
+    row["derived"] += (f" max_active={st.max_active} steps={st.steps} "
+                       f"rows_saved={st.decode_rows_saved:.2f} "
+                       f"occ={st.block_report['occupancy']:.2f} "
+                       f"frag={st.block_report['internal_fragmentation']:.2f}")
+    rows.append(row)
     return rows

@@ -64,6 +64,10 @@ class ArchConfig:
     # -- numerics -------------------------------------------------------------
     dtype: str = "float32"           # activation dtype
     param_dtype: str = "float32"
+    decode_attention: str = "contiguous"  # decode-attention backend per layer:
+                                     # contiguous (one [B, max_len] cache row
+                                     # per slot) | paged (block-pool KV behind
+                                     # a per-request block table — serving)
     remat: str = "none"              # none | dots | full
     use_pallas: bool = False         # route hot-spots through Pallas kernels
     unroll: bool = False             # unroll layer loops (dry-run flop probes:

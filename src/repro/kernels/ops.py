@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
 from repro.kernels import grouped_matmul as _gmm
+from repro.kernels import paged_attention as _pa
 from repro.kernels import ssd_scan as _ssd
 
 
@@ -57,6 +58,27 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                    interpret=_interpret())
     out = out[:, :s].reshape(b, hq, s, d).transpose(0, 2, 1, 3)
     return out
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, tables, pos, window=0):
+    """q: [B, Hq, D]; k_pages, v_pages: [NB, BS, Hkv, D]; tables: [B, MB]
+    int32 block ids (-1 = unassigned); pos: [B] int32; window: int32 scalar
+    (0 = full attention; dynamic — gemma3's per-layer windows are traced).
+    Returns [B, Hq, D]. Q heads are grouped per kv head (head h -> kv h//g,
+    groups contiguous — the ``init_attention`` layout), so GQA needs no KV
+    repetition in HBM.
+    """
+    b, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = _pa.paged_attention_bkgd(qg, k_pages, v_pages,
+                                   jnp.asarray(tables, jnp.int32),
+                                   jnp.asarray(pos, jnp.int32), win,
+                                   interpret=_interpret())
+    return out.reshape(b, hq, d)
 
 
 @functools.partial(jax.jit, static_argnames=("chunk",))

@@ -29,6 +29,31 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0):
     return out.reshape(b, sq, hq, d).astype(q.dtype)
 
 
+def paged_attention(q, k_pages, v_pages, tables, pos, window=0):
+    """Paged decode attention oracle (one query token per slot).
+
+    q: [B, Hq, D]; k_pages, v_pages: [NB, BS, Hkv, D]; tables: [B, MB] int32
+    block ids (-1 = unassigned); pos: [B] int32 — row b attends logical
+    positions [0, pos[b]] gathered through its block table. -> [B, Hq, D].
+    """
+    nb, bs, hkv, d = k_pages.shape
+    b, hq, _ = q.shape
+    safe = jnp.maximum(tables, 0)
+    k = k_pages[safe].reshape(b, -1, hkv, d).astype(jnp.float32)
+    v = v_pages[safe].reshape(b, -1, hkv, d).astype(jnp.float32)
+    k_pos = jnp.arange(k.shape[1])[None, :]
+    valid = jnp.repeat(tables >= 0, bs, axis=1) & (k_pos <= pos[:, None])
+    if window:
+        valid &= k_pos > pos[:, None] - window
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k) / math.sqrt(d)
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v)
+    return out.reshape(b, hq, d).astype(q.dtype)
+
+
 def ssd(xdt, a_log, B, C):
     """Naive sequential SSD recurrence (the semantic ground truth).
 

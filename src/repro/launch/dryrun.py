@@ -83,13 +83,20 @@ def _div(n: int, size: int) -> bool:
     return n % size == 0 and n > 0
 
 
-def cache_pspecs(cfg, cache_shape, mesh, *, seq_shard: bool, batch: int):
+def cache_pspecs(cfg, cache_shape, mesh, *, seq_shard: bool, batch: int,
+                 paged: bool = False):
     """PartitionSpecs for the decode cache, per family (DESIGN.md §7).
 
     KV head counts that do not divide the model axis fall back to sharding
     the cache SEQ dimension over 'model' (whisper kv=20, qwen2-7b kv=4,
     phi3.5-moe kv=8 at 32k x batch 128 do not fit HBM otherwise); decode
-    attention handles a seq-sharded KV via partial-softmax all-reduce."""
+    attention handles a seq-sharded KV via partial-softmax all-reduce.
+
+    ``paged=True`` describes the block-pool layout instead: k/v leaves are
+    ``[L, n_blocks, block_size, kv, hd]`` — the block dimension stays
+    unsharded (any slot's table may name any block, so blocks must be
+    addressable without a gather collective), KV heads shard over 'model',
+    and the small-KV-head fallback shards the in-block position dimension."""
     ba = _batch_axes(mesh)
     bsz = 1
     for a in ba:
@@ -102,6 +109,11 @@ def cache_pspecs(cfg, cache_shape, mesh, *, seq_shard: bool, batch: int):
         shape = leaf.shape
         def m_ax(dim):
             return "model" if _div(shape[dim], msize) else None
+        if paged and name in ("k", "v"):
+            # [L, NB, BS, kv, hd]
+            s_ax = ("model" if m_ax(3) is None and _div(shape[2], msize)
+                    else None)
+            return P(None, None, s_ax, m_ax(3), None)
         if name in ("k", "v") or name.endswith(("attn_k", "attn_v")):
             # [L_or_G, B, S, kv, hd]
             if seq_shard:

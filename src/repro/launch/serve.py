@@ -1,17 +1,25 @@
 """Serving driver: static / continuous / sharded batched generation.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
-        --engine continuous --mesh host --slots 8 --batch 12 \
+        --engine continuous --cache paged --mesh host --slots 8 --batch 12 \
         --arrival-rate 2 --policy fcfs --verify
 
 Engines: ``static`` runs one batch with a slot per request (one admission
 round); ``continuous`` bounds the pool to ``--slots`` and joins/evicts per
-decode step. ``--mesh host`` executes the jitted decode step TP/DP-sharded
-over the host mesh (forcing an 8-device host platform when run from the CLI,
-like launch/dryrun.py). ``--arrival-rate R`` switches to open-loop arrivals:
+decode step. ``--cache paged`` swaps the per-slot max_len cache rows for the
+block-pool cache (attention families): admission is by free *blocks*
+(length-proportional, ``--block-size`` positions each, ``--blocks`` total),
+prompts prefill in block_size chunks, and decode compacts to the live slots
+(the summary reports the saved rows and the pool's occupancy/fragmentation).
+``--mesh host`` executes the jitted decode step TP/DP-sharded over the host
+mesh (forcing an 8-device host platform when run from the CLI, like
+launch/dryrun.py). ``--arrival-rate R`` switches to open-loop arrivals:
 request i becomes admissible at decode step i/R; 0 means all arrive at once.
-``--verify`` re-runs the request set on a single-device static engine and
-checks per-request outputs are identical.
+``--temperature``/``--top-k`` sample on per-slot RNG lanes
+(``jax.random.fold_in`` on slot id + decode step); greedy is the default.
+``--verify`` re-runs the request set on a single-device static engine with a
+contiguous cache and checks per-request outputs are identical — the paged
+exactness invariant (greedy only).
 """
 import os
 import sys
@@ -53,31 +61,52 @@ def main() -> None:
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--engine", default="static",
                     choices=["static", "continuous"])
+    ap.add_argument("--cache", default="contiguous",
+                    choices=["contiguous", "paged"])
     ap.add_argument("--mesh", default="single", choices=["single", "host"])
     ap.add_argument("--policy", default="fcfs", choices=["fcfs", "sjf"])
     ap.add_argument("--batch", type=int, default=8,
                     help="number of requests in the set")
     ap.add_argument("--slots", type=int, default=4,
                     help="cache-pool slots (continuous engine)")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV positions per block (paged cache)")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="paged pool size in blocks "
+                         "(0 = slots * ceil(max_len / block_size))")
+    ap.add_argument("--watermark", type=float, default=0.05,
+                    help="fraction of blocks reserved at admission (paged)")
     ap.add_argument("--prompt-len", type=int, default=8,
                     help="max prompt length (lengths are mixed in [len/2, len])")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop arrivals per decode step (0 = all at once)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples on per-slot RNG lanes")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="top-k truncation for sampling (0 = full vocab)")
     ap.add_argument("--verify", action="store_true",
                     help="check outputs against a single-device static engine")
     args = ap.parse_args()
 
+    if args.verify and args.temperature > 0:
+        ap.error("--verify is the greedy exactness path; drop --temperature")
+
     cfg = get_config(args.arch, smoke=args.preset == "smoke")
     n_slots = args.slots if args.engine == "continuous" else None
+    n_blocks = args.blocks or None
+    engine_kw = dict(cache=args.cache, block_size=args.block_size,
+                     n_blocks=n_blocks, watermark=args.watermark,
+                     temperature=args.temperature, top_k=args.top_k)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
-                                max_len=args.max_len, policy=args.policy)
+                                max_len=args.max_len, policy=args.policy,
+                                **engine_kw)
     else:
         engine = ServeEngine(cfg, max_len=args.max_len, n_slots=n_slots,
-                             policy=args.policy)
+                             policy=args.policy, **engine_kw)
 
     reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
                          args.arrival_rate)
@@ -86,6 +115,7 @@ def main() -> None:
     record = {
         "arch": cfg.arch_id,
         "engine": args.engine,
+        "cache": args.cache,
         "mesh": args.mesh,
         "policy": args.policy,
         "n_devices": jax.device_count(),

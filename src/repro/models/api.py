@@ -45,6 +45,13 @@ class Model:
     init_cache: Callable
     decode_step: Callable
     module: Any
+    # paged decode-cache entry points (attention families only; None for the
+    # recurrent families whose state is O(1) and has nothing to page):
+    init_paged_cache: Any = None        # (n_blocks, block_size) -> cache
+    paged_decode_step: Any = None       # (params, cache, tokens, pos, tables)
+    paged_prefill_chunk: Any = None     # (params, cache, tokens, start,
+                                        #  tables, state, cap_tokens)
+    paged_prefill_state: Any = None     # (batch) -> cross-chunk carry
 
 
 def build_model(cfg: ArchConfig) -> Model:
@@ -70,8 +77,28 @@ def build_model(cfg: ArchConfig) -> Model:
     def decode_step(params, cache, tokens, pos):
         return mod.decode_step(cfg, params, cache, tokens, pos)
 
+    paged = {}
+    if hasattr(mod, "init_paged_cache"):
+        paged = dict(
+            init_paged_cache=(
+                lambda n_blocks, block_size, dtype=None:
+                mod.init_paged_cache(cfg, n_blocks, block_size, dtype)),
+            paged_decode_step=(
+                lambda params, cache, tokens, pos, tables:
+                mod.paged_decode_step(cfg, params, cache, tokens, pos,
+                                      tables)),
+            paged_prefill_chunk=(
+                lambda params, cache, tokens, start, tables, state=None,
+                cap_tokens=0:
+                mod.paged_prefill_chunk(cfg, params, cache, tokens, start,
+                                        tables, state, cap_tokens)),
+            paged_prefill_state=(
+                lambda batch=1: mod.paged_prefill_state(cfg, batch)),
+        )
+
     return Model(cfg=cfg, init=init, loss=loss, forward=forward,
-                 init_cache=init_cache, decode_step=decode_step, module=mod)
+                 init_cache=init_cache, decode_step=decode_step, module=mod,
+                 **paged)
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +144,15 @@ def cache_specs(cfg: ArchConfig, batch: int, max_len: int):
     """ShapeDtypeStructs for the decode cache (via eval_shape — no alloc)."""
     model = build_model(cfg)
     return jax.eval_shape(lambda: model.init_cache(batch, max_len))
+
+
+def paged_cache_specs(cfg: ArchConfig, n_blocks: int, block_size: int):
+    """ShapeDtypeStructs for the paged (block-pool) decode cache."""
+    model = build_model(cfg)
+    if model.init_paged_cache is None:
+        raise ValueError(f"family {cfg.family!r} has no paged decode cache")
+    return jax.eval_shape(lambda: model.init_paged_cache(n_blocks,
+                                                         block_size))
 
 
 def params_specs(cfg: ArchConfig):

@@ -8,7 +8,7 @@ leading layer axis) without framework machinery.
 from __future__ import annotations
 
 import math
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -250,6 +250,115 @@ def mha(q, k, v, mask, *, use_pallas: bool = False, causal: bool = False,
     return out
 
 
+# ---------------------------------------------------------------------------
+# Paged decode-attention backend
+#
+# The serving mirror of Synergy's memory-sensitivity claim: a request holds
+# ceil(len / block_size) fixed-size KV blocks behind a per-request block
+# table instead of a full max_len cache row (serve/paged.py manages the
+# pool). The layer-level backend is selected per layer next to
+# plan_attention_scheme: "contiguous" threads the classic (ck, cv) cache,
+# "paged" threads a PagedKV and routes through paged_decode_attention.
+# ---------------------------------------------------------------------------
+DECODE_BACKENDS = ("contiguous", "paged")
+
+
+class PagedKV(NamedTuple):
+    """One layer's paged decode cache: block-pool K/V plus the block table.
+
+    k, v: [n_blocks, block_size, Hkv, D] — the shared block pool.
+    tables: [B, max_blocks] int32 — row b's logical position p lives in block
+    ``tables[b, p // block_size]`` at offset ``p % block_size``; -1 marks an
+    unassigned table column (padding rows read nothing and write nowhere).
+    """
+    k: jax.Array
+    v: jax.Array
+    tables: jax.Array
+
+
+def plan_decode_backend(cfg, kv_cache) -> str:
+    """Select the decode-attention backend for one layer call.
+
+    The backend follows the cache representation the caller threads in and
+    must agree with ``cfg.decode_attention`` — a paged cache reaching a layer
+    whose config says contiguous (or vice versa) is a wiring bug, not a
+    fallback case.
+    """
+    if cfg.decode_attention not in DECODE_BACKENDS:
+        raise ValueError(
+            f"unknown decode_attention {cfg.decode_attention!r}; "
+            f"known: {DECODE_BACKENDS}")
+    backend = "paged" if isinstance(kv_cache, PagedKV) else "contiguous"
+    if kv_cache is not None and backend != cfg.decode_attention:
+        raise ValueError(
+            f"decode cache is {backend} but cfg.decode_attention is "
+            f"{cfg.decode_attention!r}")
+    return backend
+
+
+def paged_kv_write(pkv: PagedKV, k, v, positions) -> PagedKV:
+    """Write k/v [B, C, Hkv, D] at logical ``positions`` [B, C] through the
+    block table. Rows whose table has no block for a position (padding rows,
+    ``tables[b, p // bs] < 0``) are dropped, never scattered into a live
+    block."""
+    nb, bs = pkv.k.shape[:2]
+    p = jnp.asarray(positions, jnp.int32)
+    blk = jnp.take_along_axis(pkv.tables, p // bs, axis=1)
+    blk = jnp.where(blk >= 0, blk, nb)           # out of bounds -> dropped
+    off = p % bs
+    nk = pkv.k.at[blk, off].set(k.astype(pkv.k.dtype), mode="drop")
+    nv = pkv.v.at[blk, off].set(v.astype(pkv.v.dtype), mode="drop")
+    return PagedKV(nk, nv, pkv.tables)
+
+
+def paged_kv_gather(pkv: PagedKV):
+    """Materialize each row's pages: -> (k [B, MB*BS, Hkv, D], v likewise,
+    k_pos [B, MB*BS] logical positions, valid [B, MB*BS] assigned-block
+    mask). Unassigned table entries gather block 0 and are masked off."""
+    nb, bs = pkv.k.shape[:2]
+    b, mb = pkv.tables.shape
+    safe = jnp.maximum(pkv.tables, 0)
+    kg = pkv.k[safe].reshape(b, mb * bs, *pkv.k.shape[2:])
+    vg = pkv.v[safe].reshape(b, mb * bs, *pkv.v.shape[2:])
+    k_pos = jnp.broadcast_to(jnp.arange(mb * bs, dtype=jnp.int32)[None],
+                             (b, mb * bs))
+    valid = jnp.repeat(pkv.tables >= 0, bs, axis=1)
+    return kg, vg, k_pos, valid
+
+
+def paged_decode_attention(cfg, q, k, v, pkv: PagedKV, positions, window,
+                           scheme):
+    """The "paged" decode-attention backend: write this call's (post-RoPE)
+    k/v [B, C, Hkv, D] at ``positions`` [B, C] through the block table, then
+    attend q over the gathered pages with the same validity mask semantics as
+    the contiguous path (k_pos <= pos, optional sliding window). Handles both
+    decode (C == 1, per-row positions) and chunked prefill (B == 1, a span of
+    positions). Returns (attn out [B, C, Hq, D], (new_k, new_v) block pools).
+
+    ``cfg.use_pallas`` routes single-token decode through the Pallas
+    block-table kernel (kernels/paged_attention.py); chunked prefill and the
+    default path gather pages and reuse ``mha`` so paged outputs stay
+    token-identical to contiguous decode.
+    """
+    b, c = q.shape[:2]
+    pkv = paged_kv_write(pkv, k, v, positions)
+    if cfg.use_pallas and c == 1:
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(q[:, 0], pkv.k, pkv.v, pkv.tables,
+                                   positions[:, 0], window)[:, None]
+        return out, (pkv.k, pkv.v)
+    kg, vg, k_pos, assigned = paged_kv_gather(pkv)
+    kg = shard(kg, "batch", "kv_seq", None, None)
+    vg = shard(vg, "batch", "kv_seq", None, None)
+    valid = assigned[:, None, :] & (k_pos[:, None, :] <= positions[:, :, None])
+    if not (isinstance(window, int) and window == 0):
+        valid &= (window == 0) | (k_pos[:, None, :]
+                                  > positions[:, :, None] - window)
+    out = mha(q, kg, vg, valid[:, None], no_repeat=cfg.gqa_no_repeat,
+              scheme=scheme)
+    return out, (pkv.k, pkv.v)
+
+
 def decode_positions(b: int, pos) -> jax.Array:
     """[B, 1] position matrix for a decode step. ``pos`` is a scalar (all
     rows at the same position — static batching, the dry-run's serve step) or
@@ -290,15 +399,26 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
     Returns (out, new_kv_cache_or_None).
     """
     b, s, _ = x.shape
-    kv_len = (kv_cache[0].shape[1] if kv_cache is not None
-              else cross_kv[0].shape[1] if cross_kv is not None else s)
+    if isinstance(kv_cache, PagedKV):
+        kv_len = kv_cache.tables.shape[1] * kv_cache.k.shape[1]
+    else:
+        kv_len = (kv_cache[0].shape[1] if kv_cache is not None
+                  else cross_kv[0].shape[1] if cross_kv is not None else s)
     scheme = plan_attention_scheme(cfg, b, s, kv_len)
+    backend = plan_decode_backend(cfg, kv_cache)
     q, k, v = _qkv(p, cfg, x, scheme=scheme)
     new_cache = None
 
     if cross_kv is not None:
         k, v = cross_kv
         mask = None
+    elif backend == "paged":
+        if cfg.pos_emb == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        out, new_cache = paged_decode_attention(cfg, q, k, v, kv_cache,
+                                                positions, window, scheme)
+        return out.reshape(b, s, -1) @ p["wo"], new_cache
     elif kv_cache is not None:
         ck, cv = kv_cache
         if cfg.pos_emb == "rope":

@@ -56,15 +56,24 @@ def capacity(cfg, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)          # round up to 8
 
 
-def moe_ffn(cfg, p, x):
-    """x: [B, S, D] -> ([B, S, D], aux_loss).
+def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None):
+    """x: [B, S, D] -> ([B, S, D], aux_loss[, new_counts]).
 
     Dispatch is computed independently per batch row (vmap) so the dispatch
     buffers are [B, E, C, D]: batch shards over 'data', experts over 'model'.
+
+    ``counts``/``cap_tokens`` make the layer chunkable (paged prefill):
+    ``counts`` [B, E] int32 carries how many assignments each expert has
+    already received from earlier chunks of the same sequence — the in-expert
+    slot of a token is its global arrival order, so capacity drops land on
+    exactly the same tokens as a one-pass forward — and ``cap_tokens`` pins
+    the capacity to the full sequence length instead of the chunk length.
+    When ``counts`` is given the updated counts are returned as a third
+    output.
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
-    cap = capacity(cfg, s)
+    cap = capacity(cfg, cap_tokens if cap_tokens else s)
 
     logits = (x @ p["router"]).astype(jnp.float32)               # [B, S, E]
     probs = jax.nn.softmax(logits, axis=-1)
@@ -77,13 +86,15 @@ def moe_ffn(cfg, p, x):
     mean_prob = jnp.mean(probs, axis=(0, 1))                     # [E]
     aux = e * jnp.sum(frac_tokens / k * mean_prob)
 
-    def dispatch_row(xt, row_e, row_p):
-        """xt: [S, D]; row_e/row_p: [S, K] -> ([E, C, D], combine meta)."""
+    def dispatch_row(xt, row_e, row_p, cnt):
+        """xt: [S, D]; row_e/row_p: [S, K]; cnt: [E] carried assignment
+        counts -> ([E, C, D], combine meta, updated counts)."""
         flat_e = row_e.reshape(-1)                               # [S*K]
         flat_p = row_p.reshape(-1)
         flat_tok = jnp.repeat(jnp.arange(s), k)
         one = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
-        pos_in_e = jnp.cumsum(one, axis=0)[jnp.arange(s * k), flat_e] - 1
+        pos_in_e = (cnt[flat_e]
+                    + jnp.cumsum(one, axis=0)[jnp.arange(s * k), flat_e] - 1)
         keep = pos_in_e < cap
         safe_pos = jnp.where(keep, pos_in_e, cap - 1)
         if cfg.moe_gather_dispatch:
@@ -100,11 +111,13 @@ def moe_ffn(cfg, p, x):
             buf = jnp.zeros((e, cap, d), xt.dtype)
             buf = buf.at[flat_e, safe_pos].add(
                 jnp.where(keep[:, None], xt[flat_tok], 0.0))
-        return buf, (flat_e, safe_pos, flat_tok,
-                     jnp.where(keep, flat_p, 0.0))
+        return (buf, (flat_e, safe_pos, flat_tok,
+                      jnp.where(keep, flat_p, 0.0)),
+                cnt + jnp.sum(one, axis=0))
 
-    buf, meta = jax.vmap(dispatch_row)(x, top_e, top_p)          # [B, E, C, D]
-    buf = shard(buf, "batch", "experts", None, None)
+    cnt0 = counts if counts is not None else jnp.zeros((b, e), jnp.int32)
+    buf, meta, new_counts = jax.vmap(dispatch_row)(x, top_e, top_p, cnt0)
+    buf = shard(buf, "batch", "experts", None, None)              # [B, E, C, D]
 
     # expert computation: batched swiglu over the expert axis
     gu = jnp.einsum("becd,edf->becf", buf, p["we_gate_up"])
@@ -119,6 +132,8 @@ def moe_ffn(cfg, p, x):
         return jax.ops.segment_sum(y, flat_tok, num_segments=s)
 
     y = jax.vmap(combine_row)(out_buf, meta)                     # [B, S, D]
+    if counts is not None:
+        return y, aux, new_counts
     return y, aux
 
 
@@ -178,6 +193,63 @@ def loss_fn(cfg, params, batch):
 
 
 init_cache = T.init_cache
+init_paged_cache = T.init_paged_cache
+
+
+def paged_prefill_state(cfg, batch: int = 1):
+    """Per-layer expert assignment counts carried across prefill chunks, so
+    capacity drops match the one-pass forward (see moe_ffn)."""
+    return jnp.zeros((cfg.n_layers, batch, cfg.n_experts), jnp.int32)
+
+
+def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
+                        state=None, cap_tokens: int = 0):
+    """MoE chunked prefill: attention pages through the block table like the
+    dense path; the expert FFN routes with the carried per-layer counts and
+    the full-prompt capacity (``cap_tokens``) so chunked routing equals
+    one-pass routing token for token."""
+    x = L.embed(params["emb"], cfg, tokens)
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    if state is None:
+        state = paged_prefill_state(cfg, b)
+
+    def body(x, scanned):
+        p, ck, cv, cnt = scanned
+        h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
+        attn_out, new_kv = L.attention(p["attn"], cfg, h, positions,
+                                       kv_cache=L.PagedKV(ck, cv, tables))
+        x = x + attn_out
+        h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
+        ffn_out, _aux, new_cnt = moe_ffn(cfg, p, h, counts=cnt,
+                                         cap_tokens=cap_tokens)
+        x = shard(x + ffn_out, "batch", None, None)
+        return x, (*new_kv, new_cnt)
+
+    x, (new_k, new_v, new_counts) = L.scan_layers(
+        cfg, body, x, (params["layers"], cache["k"], cache["v"], state))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits[:, -1:], {"k": new_k, "v": new_v}, new_counts
+
+
+def paged_decode_step(cfg, params, cache, tokens, pos, tables):
+    """One paged decode step (see transformer.paged_decode_step)."""
+    x = L.embed(params["emb"], cfg, tokens)
+    b = x.shape[0]
+    positions = L.decode_positions(b, pos)
+
+    def body(x, scanned):
+        p, ck, cv = scanned
+        x, new_kv, _aux = _layer(cfg, p, x, positions,
+                                 kv_cache=L.PagedKV(ck, cv, tables))
+        return x, new_kv
+
+    x, (new_k, new_v) = L.scan_layers(
+        cfg, body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits, {"k": new_k, "v": new_v}
 
 
 def decode_step(cfg, params, cache, tokens, pos):

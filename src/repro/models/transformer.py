@@ -68,13 +68,21 @@ def _layer(cfg, p, x, positions, window, kv_cache=None, cache_pos=None):
 def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos):
     """Attention with a *traced* window size (for scanned local/global mix)."""
     b, s, _ = x.shape
-    kv_len = kv_cache[0].shape[1] if kv_cache is not None else s
+    if isinstance(kv_cache, L.PagedKV):
+        kv_len = kv_cache.tables.shape[1] * kv_cache.k.shape[1]
+    else:
+        kv_len = kv_cache[0].shape[1] if kv_cache is not None else s
     scheme = L.plan_attention_scheme(cfg, b, s, kv_len)
+    backend = L.plan_decode_backend(cfg, kv_cache)
     q, k, v = L._qkv(p, cfg, x, scheme=scheme)
     if cfg.pos_emb == "rope":
         q = L.apply_rope(q, positions, cfg.rope_theta)
         k = L.apply_rope(k, positions, cfg.rope_theta)
     new_cache = None
+    if backend == "paged":
+        out, new_cache = L.paged_decode_attention(cfg, q, k, v, kv_cache,
+                                                  positions, window, scheme)
+        return out.reshape(b, s, -1) @ p["wo"], new_cache
     if kv_cache is not None:
         ck, cv = kv_cache
         ck, cv, k_pos, cpos = L.update_kv_cache(ck, cv, k, v, cache_pos)
@@ -273,6 +281,74 @@ def init_cache(cfg, batch: int, max_len: int, dtype=None):
     hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
     shape = (cfg.n_layers, batch, max_len, nkv, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def init_paged_cache(cfg, n_blocks: int, block_size: int, dtype=None):
+    """Block-pool decode cache: ``n_blocks`` blocks of ``block_size`` KV
+    positions shared by all requests (serve/paged.py's BlockManager carves
+    them up); the per-request block tables live outside the pytree."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    shape = (cfg.n_layers, n_blocks, block_size, nkv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def paged_prefill_state(cfg, batch: int = 1):
+    """Cross-chunk prefill carry (none for dense attention)."""
+    return None
+
+
+def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
+                        state=None, cap_tokens: int = 0):
+    """Prefill one prompt chunk into the paged cache.
+
+    tokens: [1, C] (a ``block_size`` slice of the prompt; the last chunk may
+    be shorter); start: int32 scalar — the chunk's first logical position;
+    tables: [1, MB] — the request's block table (blocks covering
+    [0, start + C) must already be assigned). The chunk's K/V is appended
+    through the table and attention spans every cached position, so chaining
+    chunks reproduces the one-pass forward without ever materializing a
+    contiguous max_len row. Returns (last-position logits [1, 1, V],
+    new cache, state).
+    """
+    x = L.embed(params["emb"], cfg, tokens)
+    b, c, _ = x.shape
+    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        p, w, ck, cv = scanned
+        x, new_kv = _layer(cfg, p, x, positions, w,
+                           kv_cache=L.PagedKV(ck, cv, tables))
+        return x, new_kv
+
+    x, (new_k, new_v) = L.scan_layers(
+        cfg, body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits[:, -1:], {"k": new_k, "v": new_v}, None
+
+
+def paged_decode_step(cfg, params, cache, tokens, pos, tables):
+    """One paged decode step. tokens: [B, 1]; pos: int32 [B] per-row
+    positions; tables: [B, MB] block tables (padding rows are all -1 and
+    decode inert garbage that is never read). Returns (logits, new_cache)."""
+    x = L.embed(params["emb"], cfg, tokens)
+    b = x.shape[0]
+    positions = L.decode_positions(b, pos)
+    windows = layer_windows(cfg)
+
+    def body(x, scanned):
+        p, w, ck, cv = scanned
+        x, new_kv = _layer(cfg, p, x, positions, w,
+                           kv_cache=L.PagedKV(ck, cv, tables))
+        return x, new_kv
+
+    x, (new_k, new_v) = L.scan_layers(
+        cfg, body, x, (params["layers"], windows, cache["k"], cache["v"]))
+    x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["emb"], cfg, x)
+    return logits, {"k": new_k, "v": new_v}
 
 
 def decode_step(cfg, params, cache, tokens, pos):

@@ -3,14 +3,17 @@
 See serve/README.md for the architecture.
 """
 from repro.serve.cache import CachePool
-from repro.serve.engine import Request, ServeEngine, ServeStats, serve_step_fn
+from repro.serve.engine import (CACHE_BACKENDS, Request, ServeEngine,
+                                ServeStats, serve_step_fn)
+from repro.serve.paged import BlockManager
 from repro.serve.scheduler import (SERVE_POLICIES, ContinuousScheduler,
                                    ServeRequest)
 from repro.serve.sharded import (ServeSharding, make_serve_sharding,
                                  sharded_engine)
 
 __all__ = [
-    "CachePool", "ContinuousScheduler", "Request", "ServeEngine",
-    "ServeRequest", "ServeSharding", "ServeStats", "SERVE_POLICIES",
-    "make_serve_sharding", "serve_step_fn", "sharded_engine",
+    "BlockManager", "CACHE_BACKENDS", "CachePool", "ContinuousScheduler",
+    "Request", "ServeEngine", "ServeRequest", "ServeSharding", "ServeStats",
+    "SERVE_POLICIES", "make_serve_sharding", "serve_step_fn",
+    "sharded_engine",
 ]

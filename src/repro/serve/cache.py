@@ -84,15 +84,27 @@ class CachePool:
         """Install a batch-1 cache pytree (same ``max_len``) into ``slot``.
 
         Replaces the entire slot row of every leaf, so stale state from a
-        previous occupant can never leak into the new request's decode.
+        previous occupant can never leak into the new request's decode. A row
+        whose non-batch dimensions disagree with the pool (a ``max_len``
+        mismatch, most commonly) is rejected — silently broadcasting a short
+        row across a longer slot would corrupt the decode mask's invariants.
         """
         if slot not in self._in_use:
             raise ValueError(f"slot {slot} is not allocated")
 
         def put(buf, row, ax):
+            row = jnp.asarray(row)
+            expect = buf.shape[:ax] + (1,) + buf.shape[ax + 1:]
+            if row.shape != expect:
+                raise ValueError(
+                    f"row cache leaf shape {row.shape} does not match the "
+                    f"pool's slot shape {expect} (max_len mismatch?)")
+            if jnp.dtype(row.dtype) != jnp.dtype(buf.dtype):
+                raise ValueError(
+                    f"row cache dtype {row.dtype} does not match the pool's "
+                    f"{buf.dtype}")
             sel = (slice(None),) * ax
-            return buf.at[sel + (slot,)].set(
-                jnp.asarray(row)[sel + (0,)].astype(buf.dtype))
+            return buf.at[sel + (slot,)].set(row[sel + (0,)])
 
         self.buffers = jax.tree_util.tree_map(put, self.buffers, row_cache,
                                               self.batch_axes)

@@ -1,10 +1,13 @@
-"""Serving engine: prefill + greedy decode over the unified model API.
+"""Serving engine: prefill + decode over the unified model API.
 
-The engine sits on top of the serve subsystem's two mechanisms:
+The engine sits on top of the serve subsystem's cache mechanisms:
 
-  * ``cache.CachePool``   — one padded cache buffer, per-slot alloc/free.
-  * ``scheduler.ContinuousScheduler`` — admission by slot availability,
-    per-step join/evict, FCFS/SJF queue ordering.
+  * ``cache.CachePool``   — one padded cache buffer, per-slot alloc/free
+    (the ``contiguous`` backend: every request owns a full max_len row).
+  * ``paged.BlockManager`` — one block-pool buffer, per-request block tables
+    (the ``paged`` backend: a request owns ceil(len / block_size) blocks).
+  * ``scheduler.ContinuousScheduler`` — admission + per-step join/evict,
+    FCFS/SJF queue ordering; paged pools admit by free *blocks*.
 
 Every mode is the same engine loop. *Static* batching is the degenerate
 scheduler configuration (all requests arrive at step 0 into a pool with one
@@ -13,24 +16,37 @@ join/evict); *continuous* batching bounds the pool and lets the scheduler
 join/evict per step. TP/DP-sharded decode is the same loop again with a
 ``sharded.ServeSharding`` plan installed (see serve/sharded.py).
 
-Prefill: attention-family models (dense / vlm / moe) run ONE full forward
-pass capturing the per-layer K/V via ``return_cache``; recurrent families
-(ssm / hybrid / encdec) scan decode steps (their state is O(1); the scan is
-jit-compiled once). Prefill is per-request at the exact prompt length — no
-cross-request padding — so a request's output never depends on what it was
-batched with, which is what makes continuous and static batching produce
-identical per-request outputs.
+Prefill (contiguous): attention-family models (dense / vlm / moe) run ONE
+full forward pass capturing the per-layer K/V via ``return_cache``;
+recurrent families (ssm / hybrid / encdec) scan decode steps. Prefill is
+per-request at the exact prompt length — no cross-request padding — so a
+request's output never depends on what it was batched with, which is what
+makes continuous and static batching produce identical per-request outputs.
 
-Decode: one jitted ``decode_step`` over the whole pool with a per-row ``pos``
-vector (each slot at its own sequence position). Inactive slots decode
-garbage that is never read and is fully overwritten at the next admission.
+Prefill (paged): the prompt prefills in ``block_size`` chunks that append
+blocks through the request's table (``paged_prefill_chunk``), so a long
+prompt never needs one contiguous max_len row. MoE chunks carry per-layer
+expert-assignment counts so chunked routing equals one-pass routing.
+
+Decode: one jitted step over the live slots with a per-row ``pos`` vector.
+The contiguous backend decodes the whole pool (inactive slots decode garbage
+that is never read); the paged backend *compacts* the decode batch to the
+active slots (padded to a power-of-two bucket) — the cache is addressed
+through block tables, not slot indices, so compaction is free and idle slots
+cost nothing. The saved work is reported as ``decode_rows_saved``.
+
+Token selection: greedy by default (the exactness/verify path). With
+``temperature > 0`` each slot samples on its own RNG lane —
+``jax.random.fold_in`` on the slot id and the decode step — optionally
+top-k-truncated, so lanes never interact across slots.
 """
 from __future__ import annotations
 
 import contextlib
+import functools
 import math
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
 import jax
@@ -40,12 +56,23 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
 from repro.serve.cache import CachePool
+from repro.serve.paged import BlockManager
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 
 #: back-compat alias — the original single-file engine exported ``Request``
 Request = ServeRequest
 
 _ATTN_PREFILL_FAMILIES = ("dense", "vlm", "moe")
+CACHE_BACKENDS = ("contiguous", "paged")
+
+
+def _bucket(n: int, cap: int) -> int:
+    """Smallest power of two >= n (capped): the compacted decode widths, so
+    a bounded number of XLA programs covers every live-slot count."""
+    b = 1
+    while b < n:
+        b *= 2
+    return min(b, cap)
 
 
 @dataclass
@@ -59,42 +86,93 @@ class ServeStats:
     mean_latency_steps: float
     p95_latency_steps: float
     mean_latency_s: float
+    max_active: int = 0               # peak concurrently-decoding requests
+    decode_rows_saved: float = 0.0    # idle-slot compaction: fraction of
+                                      # pool rows never decoded
+    preemptions: int = 0              # paged: requests bounced on pool
+                                      # pressure (regenerated exactly)
+    block_report: Optional[dict] = field(default=None)
 
 
 class ServeEngine:
-    """Greedy serving engine for any architecture family.
+    """Serving engine for any architecture family.
 
     ``n_slots=None`` (default) sizes the pool to the request set at each
     ``run``/``generate`` call — classic static batching. A fixed ``n_slots``
     bounds the pool and turns on continuous batching: the scheduler queues
     the overflow and joins/evicts requests per decode step.
+
+    ``cache="paged"`` (attention families) swaps the per-slot max_len rows
+    for the block-pool cache: admission becomes block-granular (a request
+    costs blocks proportional to its length), prefill is chunked, and decode
+    compacts to the live slots. Outputs stay token-identical to contiguous.
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
                  rng=None, n_slots: Optional[int] = None,
-                 policy: str = "fcfs", sharding=None):
+                 policy: str = "fcfs", sharding=None,
+                 cache: str = "contiguous", block_size: int = 16,
+                 n_blocks: Optional[int] = None, watermark: float = 0.05,
+                 temperature: float = 0.0, top_k: int = 0,
+                 sample_seed: int = 0):
+        if cache not in CACHE_BACKENDS:
+            raise ValueError(f"unknown cache backend {cache!r}; "
+                             f"known: {CACHE_BACKENDS}")
+        if cache == "paged":
+            if cfg.family not in _ATTN_PREFILL_FAMILIES:
+                raise ValueError(
+                    f"cache='paged' needs an attention family "
+                    f"(got {cfg.family!r}: recurrent state is O(1))")
+            cfg = cfg.replace(decode_attention="paged")
         self.cfg = cfg
         self.model: Model = build_model(cfg)
         self.max_len = max_len
         self.n_slots = n_slots
         self.policy = policy
         self.sharding = sharding
+        self.cache_kind = cache
+        self.block_size = block_size
+        self.n_blocks = n_blocks
+        self.watermark = watermark
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self._sample_key = jax.random.key(sample_seed)
+        self._sampler = None
         rng = rng if rng is not None else jax.random.key(0)
         with self._rules():
             self.params = (params if params is not None
                            else self.model.init(rng))
         if sharding is not None:
             self.params = jax.device_put(self.params, sharding.param_sharding)
-            self._decode = jax.jit(
-                self.model.decode_step,
-                in_shardings=(sharding.param_sharding,
-                              sharding.cache_sharding,
-                              sharding.token_sharding,
-                              sharding.pos_sharding),
-                out_shardings=(None, sharding.cache_sharding))
+        if cache == "paged":
+            mod, mcfg = self.model.module, self.cfg
+
+            def paged_step(params, buffers, tokens, pos, tables):
+                return mod.paged_decode_step(mcfg, params, buffers, tokens,
+                                             pos, tables)
+            if sharding is not None:
+                # tokens/pos/tables ride replicated: the compacted decode
+                # width varies per step, and they are tiny next to the pool.
+                self._decode = jax.jit(
+                    paged_step,
+                    in_shardings=(sharding.param_sharding,
+                                  sharding.cache_sharding, None, None, None),
+                    out_shardings=(None, sharding.cache_sharding))
+            else:
+                self._decode = jax.jit(paged_step)
+            self._prefill = self._paged_prefill_fn()
         else:
-            self._decode = jax.jit(self.model.decode_step)
-        self._prefill = jax.jit(self._prefill_fn())
+            if sharding is not None:
+                self._decode = jax.jit(
+                    self.model.decode_step,
+                    in_shardings=(sharding.param_sharding,
+                                  sharding.cache_sharding,
+                                  sharding.token_sharding,
+                                  sharding.pos_sharding),
+                    out_shardings=(None, sharding.cache_sharding))
+            else:
+                self._decode = jax.jit(self.model.decode_step)
+            self._prefill = jax.jit(self._prefill_fn())
 
     def _rules(self):
         """Logical-axis rules context (no-op off-mesh / unsharded)."""
@@ -134,6 +212,45 @@ class ServeEngine:
             return logits, cache
         return prefill
 
+    def _paged_prefill_fn(self):
+        """Jitted chunk prefill; ``cap`` is static (MoE capacity pinning)."""
+        mod, cfg = self.model.module, self.cfg
+
+        @functools.partial(jax.jit, static_argnums=(5,))
+        def chunk_fn(params, buffers, tokens, start, tables, cap, state):
+            return mod.paged_prefill_chunk(cfg, params, buffers, tokens,
+                                           start, tables, state, cap)
+        return chunk_fn
+
+    # -- token selection (greedy / per-slot RNG lanes) -------------------------
+    def _make_sampler(self):
+        temp, tk, base = self.temperature, self.top_k, self._sample_key
+
+        @jax.jit
+        def sample(logits, slots, step):
+            key = jax.random.fold_in(base, step)
+            keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(slots)
+            scaled = logits.astype(jnp.float32) / temp
+            if tk:
+                kth = jax.lax.top_k(scaled, tk)[0][..., -1:]
+                scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
+            return jax.vmap(jax.random.categorical)(keys, scaled)
+        return sample
+
+    def _select_tokens(self, logits, slots, step) -> np.ndarray:
+        """logits [N, V] -> next tokens [N]. Greedy unless temperature > 0;
+        sampling folds (slot id, decode step) into per-slot RNG lanes.
+        Prefill call sites pass ``~step`` (the complement lane) so a slot's
+        prefill-sampled token and its first decode token — which happen at
+        the same scheduler step — never draw on the same key."""
+        if self.temperature <= 0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        if self._sampler is None:
+            self._sampler = self._make_sampler()
+        return np.asarray(
+            self._sampler(logits, jnp.asarray(slots, jnp.int32),
+                          jnp.int32(step)), np.int32)
+
     # -- the engine loop ---------------------------------------------------------
     def run(self, requests: List[ServeRequest]
             ) -> Tuple[List[ServeRequest], ServeStats]:
@@ -142,80 +259,220 @@ class ServeEngine:
         n_slots = self.n_slots if self.n_slots else max(len(reqs), 1)
         t0 = time.perf_counter()
         with self._rules():
-            pool = CachePool(self.model, n_slots, self.max_len)
-            if self.sharding is not None:
-                pool.buffers = jax.device_put(pool.buffers,
-                                              self.sharding.cache_sharding)
-            sched = ContinuousScheduler(pool, self.policy)
-            for i, r in enumerate(reqs):
-                r.job_id = i
-                sched.submit(r)
-
-            last = np.zeros((n_slots, 1), np.int32)
-            pos = np.zeros((n_slots,), np.int32)
-            util_acc, steps = 0.0, 0
-
-            while sched.has_work:
-                sched.evict_finished()
-                admitted = sched.admit()
-                for r in admitted:
-                    tokens = jnp.asarray(
-                        np.asarray(r.prompt, np.int32))[None, :]
-                    logits, row = self._prefill(self.params, tokens)
-                    pool.write(r.slot, row)
-                    tok = int(jnp.argmax(logits[0, -1]))
-                    r.output.append(tok)
-                    last[r.slot, 0] = tok
-                    pos[r.slot] = len(r.prompt)
-                sched.evict_finished()       # satisfied by prefill alone
-                if not sched.active:
-                    nxt = sched.next_arrival()
-                    if nxt is None:
-                        break
-                    sched.step = max(sched.step + 1, int(math.ceil(nxt)))
-                    continue
-
-                # pool.write's eager scatter loses the NamedSharding layout;
-                # restore it only on rounds that actually admitted (decode's
-                # out_shardings keeps the cache correctly sharded otherwise).
-                if self.sharding is not None and admitted:
-                    pool.buffers = jax.device_put(
-                        pool.buffers, self.sharding.cache_sharding)
-                logits, pool.buffers = self._decode(
-                    self.params, pool.buffers, jnp.asarray(last),
-                    jnp.asarray(pos))
-                nxt_tok = np.asarray(jnp.argmax(logits[:, -1, :], axis=-1),
-                                     np.int32)
-                for slot, r in sched.active.items():
-                    r.output.append(int(nxt_tok[slot]))
-                    last[slot, 0] = nxt_tok[slot]
-                    pos[slot] += 1
-                util_acc += len(sched.active) / n_slots
-                steps += 1
-                sched.step += 1
-            sched.evict_finished()
+            if self.cache_kind == "paged":
+                counters = self._run_paged(reqs, n_slots)
+            else:
+                counters = self._run_contiguous(reqs, n_slots)
 
         wall = time.perf_counter() - t0
         new_tokens = sum(len(r.output) for r in reqs)
         lat_steps = [r.latency_steps for r in reqs
                      if r.latency_steps is not None]
         lat_wall = [r.latency_s for r in reqs if r.latency_s is not None]
+        steps = counters["steps"]
+        rows_possible = steps * n_slots
         stats = ServeStats(
             n_requests=len(reqs),
             new_tokens=new_tokens,
             steps=steps,
             wall_s=wall,
             tokens_per_s=new_tokens / wall if wall > 0 else 0.0,
-            slot_utilization=util_acc / steps if steps else 0.0,
+            slot_utilization=counters["util_acc"] / steps if steps else 0.0,
             mean_latency_steps=float(np.mean(lat_steps)) if lat_steps else 0.0,
             p95_latency_steps=(float(np.percentile(lat_steps, 95))
                                if lat_steps else 0.0),
             mean_latency_s=float(np.mean(lat_wall)) if lat_wall else 0.0,
+            max_active=counters["max_active"],
+            decode_rows_saved=(1.0 - counters["rows_decoded"] / rows_possible
+                               if rows_possible else 0.0),
+            preemptions=counters["preemptions"],
+            block_report=counters["block_report"],
         )
         return reqs, stats
 
+    def _run_contiguous(self, reqs, n_slots):
+        pool = CachePool(self.model, n_slots, self.max_len)
+        if self.sharding is not None:
+            pool.buffers = jax.device_put(pool.buffers,
+                                          self.sharding.cache_sharding)
+        sched = ContinuousScheduler(pool, self.policy)
+        for i, r in enumerate(reqs):
+            r.job_id = i
+            sched.submit(r)
+
+        last = np.zeros((n_slots, 1), np.int32)
+        pos = np.zeros((n_slots,), np.int32)
+        util_acc, steps, max_active = 0.0, 0, 0
+        all_slots = np.arange(n_slots, dtype=np.int32)
+
+        while sched.has_work:
+            sched.evict_finished()
+            admitted = sched.admit()
+            for r in admitted:
+                tokens = jnp.asarray(
+                    np.asarray(r.prompt, np.int32))[None, :]
+                logits, row = self._prefill(self.params, tokens)
+                pool.write(r.slot, row)
+                tok = int(self._select_tokens(logits[:, -1], [r.slot],
+                                              ~sched.step)[0])
+                r.output.append(tok)
+                last[r.slot, 0] = tok
+                pos[r.slot] = len(r.prompt)
+            sched.evict_finished()       # satisfied by prefill alone
+            if not sched.active:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                sched.step = max(sched.step + 1, int(math.ceil(nxt)))
+                continue
+
+            # pool.write's eager scatter loses the NamedSharding layout;
+            # restore it only on rounds that actually admitted (decode's
+            # out_shardings keeps the cache correctly sharded otherwise).
+            if self.sharding is not None and admitted:
+                pool.buffers = jax.device_put(
+                    pool.buffers, self.sharding.cache_sharding)
+            logits, pool.buffers = self._decode(
+                self.params, pool.buffers, jnp.asarray(last),
+                jnp.asarray(pos))
+            nxt_tok = self._select_tokens(logits[:, -1, :], all_slots,
+                                          sched.step)
+            for slot, r in sched.active.items():
+                r.output.append(int(nxt_tok[slot]))
+                last[slot, 0] = nxt_tok[slot]
+                pos[slot] += 1
+            util_acc += len(sched.active) / n_slots
+            max_active = max(max_active, len(sched.active))
+            steps += 1
+            sched.step += 1
+        sched.evict_finished()
+        return dict(steps=steps, util_acc=util_acc, max_active=max_active,
+                    rows_decoded=steps * n_slots, preemptions=0,
+                    block_report=None)
+
+    # -- paged loop --------------------------------------------------------------
+    def _paged_prefill_request(self, pool: BlockManager, r: ServeRequest,
+                               step: int) -> None:
+        """Chunked prefill: the prompt streams through the request's block
+        table in block_size slices; no contiguous max_len row ever exists."""
+        prompt = np.asarray(r.prompt, np.int32)
+        s = len(prompt)
+        cap = s if self.cfg.family == "moe" else 0
+        state = self.model.paged_prefill_state(1)
+        table = jnp.asarray(pool.table_rows([r.slot]))
+        logits = None
+        for i0 in range(0, s, pool.block_size):
+            chunk = jnp.asarray(prompt[None, i0:i0 + pool.block_size])
+            logits, pool.buffers, state = self._prefill(
+                self.params, pool.buffers, chunk, jnp.int32(i0), table,
+                cap, state)
+        tok = int(self._select_tokens(logits[:, -1], [r.slot], ~step)[0])
+        r.output.append(tok)
+
+    def _ensure_growth(self, sched, pool: BlockManager, pos) -> int:
+        """Guarantee a block for every active row's next write position,
+        preempting the most recently admitted request on pool pressure.
+        Returns the number of preemptions."""
+        n = 0
+        while True:
+            blocked = next((s for s in sorted(sched.active)
+                            if not pool.ensure(s, int(pos[s]) + 1)), None)
+            if blocked is None:
+                return n
+            if len(sched.active) == 1:
+                raise RuntimeError(
+                    "paged KV pool exhausted with a single active request; "
+                    "grow n_blocks or lower max_new_tokens")
+            victim = max(sched.active.values(),
+                         key=lambda r: (r.admitted_at, r.slot))
+            sched.preempt(victim)
+            n += 1
+
+    def _run_paged(self, reqs, n_slots):
+        pool = BlockManager(self.model, n_slots, self.max_len,
+                            block_size=self.block_size,
+                            n_blocks=self.n_blocks,
+                            watermark=self.watermark)
+        if self.sharding is not None:
+            pool.buffers = jax.device_put(pool.buffers,
+                                          self.sharding.cache_sharding)
+        sched = ContinuousScheduler(pool, self.policy)
+        for i, r in enumerate(reqs):
+            r.job_id = i
+            sched.submit(r)
+
+        last = np.zeros((n_slots, 1), np.int32)
+        pos = np.zeros((n_slots,), np.int32)
+        util_acc, steps, max_active = 0.0, 0, 0
+        rows_decoded, preemptions = 0, 0
+        peak_report = pool.report()
+
+        while sched.has_work:
+            sched.evict_finished()
+            admitted = sched.admit()
+            for r in admitted:
+                self._paged_prefill_request(pool, r, sched.step)
+                last[r.slot, 0] = r.output[-1]
+                pos[r.slot] = len(r.prompt)
+            if admitted:                 # pool pressure peaks can be
+                snap = pool.report()     # prefill-only (max_new == 1 runs)
+                if snap["used_blocks"] >= peak_report["used_blocks"]:
+                    peak_report = snap
+            sched.evict_finished()       # satisfied by prefill alone
+            if not sched.active:
+                nxt = sched.next_arrival()
+                if nxt is None:
+                    break
+                if not admitted and nxt <= sched.step:
+                    raise RuntimeError(
+                        "paged KV pool cannot admit any waiting request; "
+                        "grow n_blocks or lower the watermark")
+                sched.step = max(sched.step + 1, int(math.ceil(nxt)))
+                continue
+
+            if self.sharding is not None and admitted:
+                pool.buffers = jax.device_put(
+                    pool.buffers, self.sharding.cache_sharding)
+            preemptions += self._ensure_growth(sched, pool, pos)
+
+            # live-slot compaction: decode only rows with an active tenant,
+            # padded to a power-of-two bucket (pad rows carry all -1 tables,
+            # write nowhere, and read nothing).
+            act = sorted(sched.active)
+            bc = _bucket(len(act), n_slots)
+            toks = np.zeros((bc, 1), np.int32)
+            toks[:len(act)] = last[act]
+            p = np.zeros((bc,), np.int32)
+            p[:len(act)] = pos[act]
+            tables = np.full((bc, pool.max_blocks), -1, np.int32)
+            tables[:len(act)] = pool.table_rows(act)
+
+            logits, pool.buffers = self._decode(
+                self.params, pool.buffers, jnp.asarray(toks),
+                jnp.asarray(p), jnp.asarray(tables))
+            nxt_tok = self._select_tokens(logits[:len(act), -1, :],
+                                          np.asarray(act, np.int32),
+                                          sched.step)
+            for i, slot in enumerate(act):
+                r = sched.active[slot]
+                r.output.append(int(nxt_tok[i]))
+                last[slot, 0] = nxt_tok[i]
+                pos[slot] += 1
+            util_acc += len(act) / n_slots
+            max_active = max(max_active, len(act))
+            rows_decoded += bc
+            steps += 1
+            sched.step += 1
+            snap = pool.report()
+            if snap["used_blocks"] >= peak_report["used_blocks"]:
+                peak_report = snap          # report the pool at peak pressure
+        sched.evict_finished()
+        return dict(steps=steps, util_acc=util_acc, max_active=max_active,
+                    rows_decoded=rows_decoded, preemptions=preemptions,
+                    block_report=peak_report)
+
     def generate(self, requests: List[ServeRequest]) -> List[ServeRequest]:
-        """Run a batch of requests to completion (greedy); returns them."""
+        """Run a batch of requests to completion; returns them."""
         return self.run(requests)[0]
 
 

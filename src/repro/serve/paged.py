@@ -1,0 +1,170 @@
+"""Block-table KV manager: length-proportional cache allocation.
+
+The serving mirror of Synergy's memory-sensitivity argument (PAPER.md §4):
+`CachePool` gives every request a full ``max_len`` cache row — the
+GPU-proportional over-allocation the paper argues against. ``BlockManager``
+instead carves one ``[n_blocks, block_size, ...]`` buffer per cache leaf into
+fixed-size blocks: a request at length L holds exactly ``ceil(L /
+block_size)`` blocks behind a per-request block table, so a 40-token prompt
+in a 256-position pool costs 3 blocks of 16 instead of a 256-row.
+
+Admission is watermark-based: a request is admitted when its *prompt* blocks
+fit while keeping ``watermark * n_blocks`` blocks free as decode-growth
+headroom. Growth (``ensure``) may eat into the reserve; when the pool is
+truly out of blocks the engine preempts the most recently admitted request
+(its blocks are freed and its tokens regenerated identically after
+re-admission — prefill is deterministic).
+
+Blocks and decode slots are both recycled FIFO, mirroring ``CachePool``'s
+recycling discipline, and a freed request's table row is cleared to -1 so a
+re-issued block can never be read through a stale table.
+"""
+from __future__ import annotations
+
+import math
+from collections import deque
+from typing import Dict, Optional
+
+import numpy as np
+
+
+class BlockManager:
+    """Paged decode cache over a model's ``init_paged_cache`` pytree.
+
+    Exposes the pool surface ``ContinuousScheduler`` drives — ``alloc_for`` /
+    ``free`` / ``max_len`` / ``validate_request`` — plus the block-granular
+    calls the paged engine uses per step (``ensure``, ``table_rows``,
+    ``report``).
+    """
+
+    def __init__(self, model, n_slots: int, max_len: int,
+                 block_size: int = 16, n_blocks: Optional[int] = None,
+                 watermark: float = 0.05, dtype=None):
+        if model.init_paged_cache is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged decode cache "
+                "(recurrent state is O(1); use the contiguous CachePool)")
+        self.model = model
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.block_size = block_size
+        self.max_blocks = -(-max_len // block_size)   # table width per slot
+        #: default pool capacity == the contiguous pool's token capacity
+        self.n_blocks = (n_blocks if n_blocks is not None
+                         else n_slots * self.max_blocks)
+        self.watermark_blocks = math.ceil(watermark * self.n_blocks)
+        self.buffers = model.init_paged_cache(self.n_blocks, block_size,
+                                              dtype)
+        self._free_blocks = deque(range(self.n_blocks))
+        self._free_slots = deque(range(n_slots))
+        self._in_use: set = set()
+        self.tables = np.full((n_slots, self.max_blocks), -1, np.int32)
+        self._lengths = np.zeros((n_slots,), np.int64)  # tokens owned
+
+    # -- block math ----------------------------------------------------------
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 0) // self.block_size)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free_blocks)
+
+    @property
+    def in_use(self):
+        return frozenset(self._in_use)
+
+    # -- admission -----------------------------------------------------------
+    def validate_request(self, req) -> None:
+        """Reject requests that can never run on this pool."""
+        need = len(req.prompt) + req.max_new_tokens
+        if need > self.max_len:
+            raise ValueError(
+                f"request needs {need} cache positions but the pool's block "
+                f"tables span {self.max_len}")
+        if self.blocks_for(need) > self.n_blocks:
+            raise ValueError(
+                f"request needs {self.blocks_for(need)} blocks but the pool "
+                f"holds {self.n_blocks}")
+        if self.blocks_for(len(req.prompt)) + self.watermark_blocks \
+                > self.n_blocks:
+            raise ValueError(
+                f"prompt needs {self.blocks_for(len(req.prompt))} blocks "
+                f"which can never clear the {self.watermark_blocks}-block "
+                f"admission watermark on a {self.n_blocks}-block pool")
+
+    def can_admit(self, n_tokens: int) -> bool:
+        """Watermark admission: prompt blocks fit AND the high-watermark
+        reserve stays free for decode growth of already-admitted tenants."""
+        return (bool(self._free_slots)
+                and (self.free_blocks - self.blocks_for(n_tokens)
+                     >= self.watermark_blocks))
+
+    def alloc_for(self, req) -> Optional[int]:
+        """Admit ``req``: claim a slot + its prompt's blocks; None if the
+        watermark would be violated (the scheduler keeps it queued)."""
+        n = len(req.prompt)
+        if not self.can_admit(n):
+            return None
+        slot = self._free_slots.popleft()
+        self._in_use.add(slot)
+        for j in range(self.blocks_for(n)):
+            self.tables[slot, j] = self._free_blocks.popleft()
+        self._lengths[slot] = n
+        return slot
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot`` to cover ``n_tokens`` positions (decode append).
+        May eat into the watermark reserve; False when the pool is dry."""
+        if slot not in self._in_use:
+            raise ValueError(f"slot {slot} is not allocated")
+        have = int((self.tables[slot] >= 0).sum())
+        while have * self.block_size < n_tokens:
+            if not self._free_blocks:
+                return False
+            self.tables[slot, have] = self._free_blocks.popleft()
+            have += 1
+        self._lengths[slot] = max(self._lengths[slot], n_tokens)
+        return True
+
+    def free(self, slot: int) -> None:
+        """Release a request's slot and blocks (FIFO recycle, stale table
+        entries cleared so re-issued blocks are unreachable)."""
+        if slot not in self._in_use:
+            raise ValueError(f"slot {slot} is not allocated")
+        self._in_use.remove(slot)
+        for j in range(self.max_blocks):
+            if self.tables[slot, j] >= 0:
+                self._free_blocks.append(int(self.tables[slot, j]))
+        self.tables[slot] = -1
+        self._lengths[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- decode-step views ---------------------------------------------------
+    def table_rows(self, slots) -> np.ndarray:
+        """[len(slots), max_blocks] int32 block tables for a decode batch."""
+        return self.tables[np.asarray(slots, np.int64)]
+
+    # -- occupancy / fragmentation -------------------------------------------
+    def report(self) -> Dict[str, float]:
+        """Occupancy + fragmentation snapshot (CLI summary / tests)."""
+        used_blocks = self.n_blocks - self.free_blocks
+        allocated = used_blocks * self.block_size
+        used_tokens = int(self._lengths.sum())
+        return {
+            "n_blocks": self.n_blocks,
+            "block_size": self.block_size,
+            "used_blocks": used_blocks,
+            "free_blocks": self.free_blocks,
+            "watermark_blocks": self.watermark_blocks,
+            "occupancy": used_blocks / self.n_blocks if self.n_blocks else 0.0,
+            "used_tokens": used_tokens,
+            "allocated_tokens": allocated,
+            # internal fragmentation: allocated-but-unused tail positions of
+            # each tenant's last block.
+            "internal_fragmentation": (1.0 - used_tokens / allocated
+                                       if allocated else 0.0),
+        }

@@ -83,7 +83,9 @@ class ContinuousScheduler:
         self.step: int = 0
 
     def submit(self, req: ServeRequest) -> None:
-        if len(req.prompt) + req.max_new_tokens > self.pool.max_len:
+        if hasattr(self.pool, "validate_request"):
+            self.pool.validate_request(req)      # paged: blocks + table span
+        elif len(req.prompt) + req.max_new_tokens > self.pool.max_len:
             raise ValueError(
                 f"request needs {len(req.prompt) + req.max_new_tokens} cache "
                 f"positions but the pool holds {self.pool.max_len}")
@@ -105,7 +107,10 @@ class ContinuousScheduler:
                 r.t_arrived = now
         admitted = []
         for req in self.policy.order(ready, float(self.step)):
-            slot = self.pool.alloc()
+            # paged pools admit by free *blocks* (length-proportional, with a
+            # watermark reserve); slot pools by free slots.
+            slot = (self.pool.alloc_for(req)
+                    if hasattr(self.pool, "alloc_for") else self.pool.alloc())
             if slot is None:
                 break
             req.slot = slot
@@ -115,6 +120,23 @@ class ContinuousScheduler:
             self.waiting.remove(req)
             admitted.append(req)
         return admitted
+
+    def preempt(self, req: ServeRequest) -> None:
+        """Return an active request to the queue under block-pool pressure.
+
+        Its slot and blocks are freed and its generated tokens discarded;
+        after re-admission the deterministic prefill + greedy decode
+        regenerate them identically, so preemption is invisible in outputs.
+        """
+        if req.slot is None or self.active.get(req.slot) is not req:
+            raise ValueError("can only preempt an active request")
+        self.pool.free(req.slot)
+        del self.active[req.slot]
+        req.slot = None
+        req.admitted_at = None
+        req.t_admitted = None
+        req.output = []
+        self.waiting.append(req)
 
     def evict_finished(self) -> List[ServeRequest]:
         """Release slots of finished requests (the per-step evict half)."""

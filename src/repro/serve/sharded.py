@@ -26,7 +26,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.dist import sharding as shd
 from repro.launch.mesh import axis_sizes, make_host_mesh
-from repro.models.api import cache_specs, params_specs
+from repro.models.api import cache_specs, paged_cache_specs, params_specs
 
 
 @dataclass
@@ -45,14 +45,18 @@ class ServeSharding:
         return shd.axis_rules(self.mesh, self.table)
 
 
-def make_serve_sharding(cfg, n_slots: int, max_len: int,
-                        mesh=None) -> ServeSharding:
+def make_serve_sharding(cfg, n_slots: int, max_len: int, mesh=None, *,
+                        cache: str = "contiguous", block_size: int = 16,
+                        n_blocks=None) -> ServeSharding:
     """Build the sharding plan for a pooled serve engine.
 
     The cache specs come from ``launch.dryrun.cache_pspecs`` so serve and
     dry-run agree on the decode-cache layout; the batch (slot) dimension
     shards over 'data' when ``n_slots`` divides it, model-parallel axes per
-    family as in DESIGN.md §7.
+    family as in DESIGN.md §7. With ``cache="paged"`` the specs describe the
+    block-pool layout instead (block dimension unsharded, KV heads over
+    'model' — see ``cache_pspecs(paged=True)``), so the paged decode step
+    lowers sharded exactly like the contiguous one.
     """
     # jax is imported above, so repro.launch.dryrun's XLA_FLAGS preamble
     # (which must only run before first jax init) is a guaranteed no-op here.
@@ -68,8 +72,16 @@ def make_serve_sharding(cfg, n_slots: int, max_len: int,
         pshape = params_specs(cfg)
         pspec = shd.param_pspecs(pshape, rules)
 
-    cshape = cache_specs(cfg, n_slots, max_len)
-    cspec = cache_pspecs(cfg, cshape, mesh, seq_shard=False, batch=n_slots)
+    if cache == "paged":
+        if n_blocks is None:
+            n_blocks = n_slots * (-(-max_len // block_size))
+        cshape = paged_cache_specs(cfg, n_blocks, block_size)
+        cspec = cache_pspecs(cfg, cshape, mesh, seq_shard=False,
+                             batch=n_slots, paged=True)
+    else:
+        cshape = cache_specs(cfg, n_slots, max_len)
+        cspec = cache_pspecs(cfg, cshape, mesh, seq_shard=False,
+                             batch=n_slots)
 
     b_ax = "data" if n_slots % sizes.get("data", 1) == 0 else None
     return ServeSharding(
@@ -84,11 +96,16 @@ def make_serve_sharding(cfg, n_slots: int, max_len: int,
 
 
 def sharded_engine(cfg, *, n_slots: int = 8, max_len: int = 256,
-                   policy: str = "fcfs", params=None, rng=None, mesh=None):
+                   policy: str = "fcfs", params=None, rng=None, mesh=None,
+                   cache: str = "contiguous", block_size: int = 16,
+                   n_blocks=None, **engine_kw):
     """Convenience constructor: a continuous-batching engine whose decode
     step executes TP/DP-sharded over ``mesh`` (default: the host mesh)."""
     from repro.serve.engine import ServeEngine
 
-    plan = make_serve_sharding(cfg, n_slots, max_len, mesh=mesh)
+    plan = make_serve_sharding(cfg, n_slots, max_len, mesh=mesh, cache=cache,
+                               block_size=block_size, n_blocks=n_blocks)
     return ServeEngine(cfg, params=params, max_len=max_len, rng=rng,
-                       n_slots=n_slots, policy=policy, sharding=plan)
+                       n_slots=n_slots, policy=policy, sharding=plan,
+                       cache=cache, block_size=block_size, n_blocks=n_blocks,
+                       **engine_kw)

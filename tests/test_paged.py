@@ -1,0 +1,367 @@
+"""Paged KV subsystem tests: BlockManager mechanics, watermark admission,
+block-table reuse without leaks, chunked prefill == one-pass prefill,
+paged-vs-contiguous exactness across attention families, preemption,
+admission density vs the contiguous pool, sampling lanes, and sharded
+(host-mesh) paged decode parity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.serve import BlockManager, ServeEngine, ServeRequest, sharded_engine
+
+needs_mesh = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs --xla_force_host_platform_device_count=8")
+
+PAGED_ARCHS = ("llama3.2-1b", "olmoe-1b-7b", "phi-3-vision-4.2b")
+
+
+def _model(arch="llama3.2-1b", **over):
+    return build_model(get_config(arch, smoke=True).replace(**over))
+
+
+def _requests(cfg, lengths, arrivals=None, max_new=5, seed=5):
+    rng = np.random.default_rng(seed)
+    arrivals = arrivals or [0.0] * len(lengths)
+    return [ServeRequest(rng.integers(1, cfg.vocab_size, size=s)
+                         .astype(np.int32),
+                         max_new_tokens=max_new, arrival_time=a)
+            for s, a in zip(lengths, arrivals)]
+
+
+# ---------------------------------------------------------------------------
+# BlockManager mechanics
+# ---------------------------------------------------------------------------
+def test_block_manager_length_proportional_alloc():
+    pool = BlockManager(_model(), n_slots=4, max_len=32, block_size=8,
+                        n_blocks=8, watermark=0.0)
+    assert pool.blocks_for(40) == 5
+    r = ServeRequest(np.zeros(17, np.int32), max_new_tokens=4)  # 3 blocks
+    slot = pool.alloc_for(r)
+    assert slot == 0
+    assert (pool.tables[0] >= 0).sum() == 3          # ceil(17/8), not max_len
+    assert pool.free_blocks == 5
+    # growth appends one block when a boundary is crossed
+    assert pool.ensure(slot, 24)
+    assert (pool.tables[0] >= 0).sum() == 3          # 24 = 3*8 exactly
+    assert pool.ensure(slot, 25)
+    assert (pool.tables[0] >= 0).sum() == 4
+    pool.free(slot)
+    assert pool.free_blocks == 8
+    assert (pool.tables[0] == -1).all()              # stale table cleared
+
+
+def test_block_manager_fifo_reuse_and_guards():
+    pool = BlockManager(_model(), n_slots=2, max_len=16, block_size=8,
+                        n_blocks=3, watermark=0.0)
+    a = pool.alloc_for(ServeRequest(np.zeros(8, np.int32), max_new_tokens=1))
+    b = pool.alloc_for(ServeRequest(np.zeros(16, np.int32), max_new_tokens=0))
+    assert (a, b) == (0, 1)
+    first_blocks = list(pool.tables[0][pool.tables[0] >= 0])
+    pool.free(a)
+    with pytest.raises(ValueError):
+        pool.free(a)                                 # double-free guard
+    pool.free(b)
+    # freed blocks recycle FIFO: slot 0's block returns before slot 1's
+    c = pool.alloc_for(ServeRequest(np.zeros(8, np.int32), max_new_tokens=1))
+    assert list(pool.tables[c][pool.tables[c] >= 0]) == first_blocks
+    with pytest.raises(ValueError):
+        pool.ensure(5, 1)                            # unallocated slot
+
+
+def test_block_manager_watermark_admission():
+    pool = BlockManager(_model(), n_slots=4, max_len=32, block_size=8,
+                        n_blocks=6, watermark=0.34)    # reserve = 3 blocks
+    assert pool.watermark_blocks == 3
+    assert pool.can_admit(16)                          # 2 blocks, 4 - 2 >= 3?
+    assert not pool.can_admit(32)                      # 4 blocks violates
+    r = ServeRequest(np.zeros(16, np.int32), max_new_tokens=4)
+    slot = pool.alloc_for(r)
+    assert slot is not None and pool.free_blocks == 4
+    # decode growth may eat the reserve...
+    assert pool.ensure(slot, 40 - 8)
+    assert pool.free_blocks == 2
+    # ...but admission never does
+    assert pool.alloc_for(r) is None
+
+
+def test_block_manager_validate_request():
+    pool = BlockManager(_model(), n_slots=2, max_len=16, block_size=4,
+                        n_blocks=4, watermark=0.0)
+    with pytest.raises(ValueError):                    # table span
+        pool.validate_request(ServeRequest(np.zeros(14, np.int32),
+                                           max_new_tokens=4))
+    with pytest.raises(ValueError):                    # total blocks
+        BlockManager(_model(), n_slots=2, max_len=32, block_size=4,
+                     n_blocks=4, watermark=0.0).validate_request(
+            ServeRequest(np.zeros(20, np.int32), max_new_tokens=4))
+    with pytest.raises(ValueError):                    # watermark-infeasible
+        BlockManager(_model(), n_slots=2, max_len=16, block_size=4,
+                     n_blocks=4, watermark=0.5).validate_request(
+            ServeRequest(np.zeros(12, np.int32), max_new_tokens=2))
+
+
+def test_block_manager_report_occupancy_and_fragmentation():
+    pool = BlockManager(_model(), n_slots=2, max_len=16, block_size=8,
+                        n_blocks=4, watermark=0.0)
+    pool.alloc_for(ServeRequest(np.zeros(9, np.int32), max_new_tokens=1))
+    rep = pool.report()
+    assert rep["used_blocks"] == 2 and rep["occupancy"] == 0.5
+    assert rep["used_tokens"] == 9 and rep["allocated_tokens"] == 16
+    assert rep["internal_fragmentation"] == pytest.approx(7 / 16)
+
+
+def test_block_manager_rejects_recurrent_family():
+    with pytest.raises(ValueError):
+        BlockManager(_model("mamba2-780m"), n_slots=2, max_len=16)
+    with pytest.raises(ValueError):
+        ServeEngine(get_config("mamba2-780m", smoke=True), cache="paged")
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill == one-pass prefill
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_chunked_prefill_matches_one_pass(arch):
+    cfg = get_config(arch, smoke=True).replace(decode_attention="paged")
+    ccfg = cfg.replace(decode_attention="contiguous")
+    model, cmodel = build_model(cfg), build_model(ccfg)
+    params = model.init(jax.random.key(0))
+    s, bs = 11, 4
+    prompt = jax.random.randint(jax.random.key(1), (1, s), 0, cfg.vocab_size)
+
+    full_logits, (k_full, v_full) = cmodel.module.forward(
+        ccfg, params, prompt, return_cache=True)
+
+    cache = model.init_paged_cache(8, bs)
+    tables = np.full((1, 6), -1, np.int32)
+    nblk = -(-s // bs)
+    tables[0, :nblk] = np.arange(nblk)
+    tables = jnp.asarray(tables)
+    state = model.paged_prefill_state(1)
+    for i0 in range(0, s, bs):
+        logits, cache, state = model.paged_prefill_chunk(
+            params, cache, prompt[:, i0:i0 + bs], jnp.int32(i0), tables,
+            state, s)
+    np.testing.assert_allclose(np.asarray(logits[0, -1]),
+                               np.asarray(full_logits[0, -1]),
+                               atol=2e-4, rtol=2e-4)
+    # the paged cache holds the same K/V at every valid logical position
+    paged_k = np.asarray(cache["k"])[:, tables[0, :nblk]]       # [L,NB,BS,..]
+    paged_k = paged_k.reshape(cfg.n_layers, 1, nblk * bs, *paged_k.shape[3:])
+    np.testing.assert_allclose(paged_k[:, :, :s],
+                               np.asarray(k_full), atol=1e-5, rtol=1e-5)
+
+
+def test_paged_prefill_ignores_stale_blocks():
+    """A dirty block pool (a previous tenant's K/V everywhere) must produce
+    the same outputs as a fresh pool: the gather mask can never reach beyond
+    a request's own written positions."""
+    cfg = get_config("llama3.2-1b", smoke=True).replace(
+        decode_attention="paged")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    s, bs = 7, 4
+    prompt = jax.random.randint(jax.random.key(1), (1, s), 0, cfg.vocab_size)
+    tables = jnp.asarray(np.array([[3, 1, -1]], np.int32))
+
+    def run(cache):
+        state = model.paged_prefill_state(1)
+        for i0 in range(0, s, bs):
+            logits, cache, state = model.paged_prefill_chunk(
+                params, cache, prompt[:, i0:i0 + bs], jnp.int32(i0), tables,
+                state, s)
+        tok = jnp.argmax(logits[0, -1])[None, None].astype(jnp.int32)
+        dl, _ = model.paged_decode_step(params, cache, tok,
+                                        jnp.full((1,), s, jnp.int32), tables)
+        return logits, dl
+
+    clean = model.init_paged_cache(6, bs)
+    dirty = jax.tree_util.tree_map(lambda l: jnp.ones_like(l) * 37.0, clean)
+    for a, b in zip(run(clean), run(dirty)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# paged continuous == contiguous static, per request
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_paged_matches_contiguous_static_per_request(arch):
+    """Mixed lengths, staggered arrivals, block reuse — paged continuous
+    outputs must be token-for-token identical to one contiguous static batch
+    (the acceptance invariant, also checked by launch.serve --verify)."""
+    cfg = get_config(arch, smoke=True)
+    lengths, arrivals = [5, 3, 8, 2, 6], [0.0, 0.0, 1.0, 3.0, 4.0]
+
+    static, _ = ServeEngine(cfg, max_len=32).run(_requests(cfg, lengths))
+    paged, stats = ServeEngine(cfg, max_len=32, n_slots=3, cache="paged",
+                               block_size=4).run(
+        _requests(cfg, lengths, arrivals))
+
+    for a, b in zip(static, paged):
+        assert a.output == b.output
+    assert all(r.finished_at is not None for r in paged)
+    # idle-slot compaction: the paged engine decoded fewer rows than
+    # steps * n_slots would have
+    assert stats.decode_rows_saved > 0.0
+    assert stats.block_report["block_size"] == 4
+
+
+def test_paged_block_reuse_never_leaks_prior_kv():
+    """A freed request's blocks are re-issued to a new tenant (the pool is
+    sized so reuse is forced) and the tenant's outputs equal a run on a
+    fresh pool — the block-granular mirror of the slot-recycle test."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths = [6, 7, 5]
+    # 4 blocks of 4 = 16 positions: each request needs 2-3 blocks, so with
+    # one slot every later request reuses the earlier tenants' blocks.
+    shared, _ = ServeEngine(cfg, params=params, max_len=16, n_slots=1,
+                            cache="paged", block_size=4, n_blocks=4,
+                            watermark=0.0).run(_requests(cfg, lengths))
+    for r in shared:
+        fresh, _ = ServeEngine(cfg, params=params, max_len=16,
+                               cache="paged", block_size=4).run(
+            [ServeRequest(r.prompt.copy(),
+                          max_new_tokens=r.max_new_tokens)])
+        assert fresh[0].output == r.output
+
+
+def test_paged_preemption_regenerates_identically():
+    """Under block pressure the engine preempts the most recently admitted
+    request; after re-admission its tokens regenerate identically."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    reqs = _requests(cfg, [8, 8], max_new=8)
+    static, _ = ServeEngine(cfg, params=params, max_len=32).run(
+        _requests(cfg, [8, 8], max_new=8))
+    # each request grows to 16 tokens = 4 blocks; 6 blocks cannot hold both
+    paged, stats = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                               cache="paged", block_size=4, n_blocks=6,
+                               watermark=0.0).run(reqs)
+    assert stats.preemptions >= 1
+    for a, b in zip(static, paged):
+        assert a.output == b.output
+
+
+def test_paged_admits_where_contiguous_refuses():
+    """Equal token budgets: the contiguous pool rejects a prompt longer than
+    its per-slot max_len outright, and serves fewer requests concurrently at
+    mixed lengths — the admission-density acceptance criterion."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    budget = 128                                     # cache positions
+
+    # (a) hard refusal: one 40-token prompt. Contiguous spends the budget as
+    # 4 slots x 32 positions -> submit raises; paged spans 64 positions of
+    # table while spending the same 128 pooled positions -> serves it.
+    long_req = [ServeRequest(np.arange(1, 41, dtype=np.int32),
+                             max_new_tokens=4)]
+    with pytest.raises(ValueError):
+        ServeEngine(cfg, params=params, max_len=32, n_slots=4).run(
+            [ServeRequest(long_req[0].prompt.copy(), max_new_tokens=4)])
+    out, _ = ServeEngine(cfg, params=params, max_len=64, n_slots=4,
+                         cache="paged", block_size=8, n_blocks=16,
+                         watermark=0.0).run(long_req)
+    assert len(out[0].output) == 4
+
+    # (b) density: 8 mixed-length requests. Contiguous: 128/32 = 4 slots.
+    # Paged: same 128 positions as 16 blocks of 8 serve all 8 at once.
+    lengths = [4, 6, 5, 7, 4, 6, 5, 7]
+    cont, cs = ServeEngine(cfg, params=params, max_len=32, n_slots=4).run(
+        _requests(cfg, lengths, max_new=4))
+    paged, ps = ServeEngine(cfg, params=params, max_len=32, n_slots=8,
+                            cache="paged", block_size=8, n_blocks=16,
+                            watermark=0.0).run(_requests(cfg, lengths,
+                                                         max_new=4))
+    assert cs.max_active == 4
+    assert ps.max_active == 8
+    assert ps.steps < cs.steps
+    for a, b in zip(cont, paged):
+        assert a.output == b.output
+
+
+# ---------------------------------------------------------------------------
+# sampling lanes (per-slot RNG)
+# ---------------------------------------------------------------------------
+def test_sampling_lanes_deterministic_and_greedy_default():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths = [5, 3, 6]
+
+    greedy, _ = ServeEngine(cfg, params=params, max_len=32).run(
+        _requests(cfg, lengths))
+    # top-k=1 sampling degenerates to greedy whatever the temperature
+    top1, _ = ServeEngine(cfg, params=params, max_len=32, temperature=0.9,
+                          top_k=1).run(_requests(cfg, lengths))
+    for a, b in zip(greedy, top1):
+        assert a.output == b.output
+
+    eng = ServeEngine(cfg, params=params, max_len=32, temperature=8.0,
+                      sample_seed=7)
+    s1, _ = eng.run(_requests(cfg, lengths))
+    s2, _ = eng.run(_requests(cfg, lengths))
+    for a, b in zip(s1, s2):                 # same lanes -> same samples
+        assert a.output == b.output
+    assert any(a.output != g.output for a, g in zip(s1, greedy))
+
+
+def test_sampling_lanes_work_with_paged_cache():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    eng = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                      cache="paged", block_size=4, temperature=0.8,
+                      sample_seed=3)
+    out, _ = eng.run(_requests(cfg, [5, 4, 6], max_new=4))
+    assert all(len(r.output) == 4 for r in out)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel path inside the model
+# ---------------------------------------------------------------------------
+def test_paged_decode_step_pallas_matches_gather():
+    cfg = get_config("llama3.2-1b", smoke=True).replace(
+        decode_attention="paged")
+    model = build_model(cfg)
+    pmodel = build_model(cfg.replace(use_pallas=True))
+    params = model.init(jax.random.key(0))
+    s, bs = 6, 4
+    prompt = jax.random.randint(jax.random.key(1), (1, s), 0, cfg.vocab_size)
+    cache = model.init_paged_cache(6, bs)
+    tables = jnp.asarray(np.array([[0, 1, -1, -1]], np.int32))
+    state = model.paged_prefill_state(1)
+    for i0 in range(0, s, bs):
+        logits, cache, state = model.paged_prefill_chunk(
+            params, cache, prompt[:, i0:i0 + bs], jnp.int32(i0), tables,
+            state, s)
+    tok = jnp.argmax(logits[0, -1])[None, None].astype(jnp.int32)
+    pos = jnp.full((1,), s, jnp.int32)
+    ref_logits, _ = model.paged_decode_step(params, cache, tok, pos, tables)
+    pal_logits, _ = pmodel.paged_decode_step(params, cache, tok, pos, tables)
+    np.testing.assert_allclose(np.asarray(ref_logits), np.asarray(pal_logits),
+                               atol=2e-3, rtol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# sharded (host-mesh) paged serving
+# ---------------------------------------------------------------------------
+@needs_mesh
+def test_sharded_paged_matches_single_device_contiguous():
+    cfg = get_config("qwen2-0.5b", smoke=True)
+    lengths, arrivals = [5, 3, 8, 2, 6, 4], [0.0] * 3 + [2.0] * 3
+
+    single, _ = ServeEngine(cfg, max_len=32).run(_requests(cfg, lengths))
+    eng = sharded_engine(cfg, n_slots=4, max_len=32, cache="paged",
+                         block_size=8)
+    sharded, stats = eng.run(_requests(cfg, lengths, arrivals))
+
+    for a, b in zip(single, sharded):
+        assert a.output == b.output
+    assert stats.block_report is not None
+    # the paged pool's K/V leaves really are laid out sharded
+    shardings = jax.tree_util.tree_leaves(eng.sharding.cache_sharding)
+    assert shardings and all(not s.is_fully_replicated for s in shardings)

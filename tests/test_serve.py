@@ -101,6 +101,30 @@ def test_cache_pool_write_replaces_whole_row():
     assert val == 0.0
 
 
+def test_cache_pool_write_rejects_mismatched_max_len():
+    """Regression: a row cache built for a different max_len must be
+    rejected, not silently broadcast across the slot's positions."""
+    model = _model()
+    pool = CachePool(model, n_slots=2, max_len=16)
+    slot = pool.alloc()
+    with pytest.raises(ValueError, match="max_len"):
+        pool.write(slot, model.init_cache(1, 8))
+    # the degenerate broadcastable case (max_len 1) must also be rejected
+    with pytest.raises(ValueError, match="max_len"):
+        pool.write(slot, model.init_cache(1, 1))
+    pool.write(slot, model.init_cache(1, 16))        # matching row is fine
+
+
+def test_cache_pool_write_rejects_mismatched_dtype():
+    model = _model()
+    pool = CachePool(model, n_slots=2, max_len=8)
+    slot = pool.alloc()
+    row = jax.tree_util.tree_map(lambda l: l.astype(jnp.bfloat16),
+                                 model.init_cache(1, 8))
+    with pytest.raises(ValueError, match="dtype"):
+        pool.write(slot, row)
+
+
 # ---------------------------------------------------------------------------
 # scheduler
 # ---------------------------------------------------------------------------
