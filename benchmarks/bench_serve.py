@@ -1,7 +1,11 @@
 """Serve engines — static vs continuous vs sharded-continuous tokens/s for an
 attention-family and an ssm-family architecture, plus paged-vs-contiguous
-admission density at mixed prompt lengths (smoke shapes; set BENCH_FULL=1
-for a larger request set)."""
+admission density at mixed prompt lengths and a shared-prefix (prefix-cache)
+workload (smoke shapes; set BENCH_FULL=1 for a larger request set).
+
+Every row splits the blended us_per_call into prefill/decode wall time and
+reports the jitted-dispatch counts (``disp=P+D``) and the prefix-cache hit
+rate, so the trajectory captures where each engine spends its time."""
 from __future__ import annotations
 
 import jax
@@ -14,12 +18,18 @@ from repro.serve import ServeEngine, ServeRequest, sharded_engine
 ARCHS = ("qwen2-0.5b", "mamba2-780m")
 
 
-def _requests(cfg, n, max_new, seed=0):
+def _requests(cfg, n, max_new, seed=0, stagger=False):
+    """Mixed-length request set. ``stagger`` additionally mixes the
+    generation budgets so completions spread over the run — mid-run
+    evictions are what exercise live-slot compaction (a uniform budget
+    finishes every row on the same step and saves nothing)."""
     rng = np.random.default_rng(seed)
     return [ServeRequest(
         rng.integers(1, cfg.vocab_size,
                      size=int(rng.integers(4, 12))).astype(np.int32),
-        max_new_tokens=max_new, arrival_time=i / 2.0)
+        max_new_tokens=(int(rng.integers(max(2, max_new // 4), max_new + 1))
+                        if stagger else max_new),
+        arrival_time=i / 2.0)
         for i in range(n)]
 
 
@@ -28,7 +38,12 @@ def _row(name, stats):
     return {"name": name, "us_per_call": us,
             "derived": (f"tok_s={stats.tokens_per_s:.1f} "
                         f"util={stats.slot_utilization:.2f} "
-                        f"lat_steps={stats.mean_latency_steps:.1f}")}
+                        f"lat_steps={stats.mean_latency_steps:.1f} "
+                        f"prefill_ms={stats.prefill_s * 1e3:.0f} "
+                        f"decode_ms={stats.decode_s * 1e3:.0f} "
+                        f"disp={stats.prefill_dispatches}"
+                        f"+{stats.decode_dispatches} "
+                        f"hit={stats.prefix_hit_rate:.2f}")}
 
 
 def run():
@@ -55,32 +70,39 @@ def run():
         row["derived"] += f" ndev={jax.device_count()}"
         rows.append(row)
     rows.extend(_paged_admission_rows(n, max_new))
+    rows.extend(_prefix_cache_rows(n, max_new))
     return rows
 
 
 def _paged_admission_rows(n, max_new):
-    """Paged vs contiguous admission at mixed prompt lengths on EQUAL token
-    budgets: the contiguous pool spends the budget as few max_len rows, the
-    paged pool as length-proportional blocks — so paged admits the same
-    request set wider (max_active) and finishes in fewer decode steps."""
+    """Paged vs contiguous admission at mixed prompt lengths AND mixed
+    generation budgets on EQUAL token budgets: the contiguous pool spends
+    the budget as few max_len rows, the paged pool as length-proportional
+    blocks — so paged admits the same request set wider (max_active) and
+    finishes in fewer decode steps — and the staggered completions force
+    mid-run evictions so both backends' live-slot compaction
+    (``rows_saved``) does real work."""
     arch = "qwen2-0.5b"
     cfg = get_config(arch, smoke=True)
     max_len, block = 64, 8
     budget = (n // 2) * max_len                  # cache positions
-    reqs = _requests(cfg, n, max_new)            # fresh copies below arrive
-                                                 # at step 0 (closed loop)
+    reqs = _requests(cfg, n, max_new, stagger=True)   # fresh copies below
+                                                 # arrive at step 0
     cont = ServeEngine(cfg, max_len=max_len, n_slots=budget // max_len)
-    _, st = cont.run([ServeRequest(r.prompt.copy(), max_new_tokens=max_new)
+    _, st = cont.run([ServeRequest(r.prompt.copy(),
+                                   max_new_tokens=r.max_new_tokens)
                       for r in reqs])
     rows = []
     row = _row(f"serve/admission-contiguous/{arch}", st)
-    row["derived"] += f" max_active={st.max_active} steps={st.steps}"
+    row["derived"] += (f" max_active={st.max_active} steps={st.steps} "
+                       f"rows_saved={st.decode_rows_saved:.2f}")
     rows.append(row)
 
     paged = ServeEngine(cfg, max_len=max_len, n_slots=n, cache="paged",
                         block_size=block, n_blocks=budget // block,
                         watermark=0.0)
-    _, st = paged.run([ServeRequest(r.prompt.copy(), max_new_tokens=max_new)
+    _, st = paged.run([ServeRequest(r.prompt.copy(),
+                                    max_new_tokens=r.max_new_tokens)
                        for r in reqs])
     row = _row(f"serve/admission-paged/{arch}", st)
     row["derived"] += (f" max_active={st.max_active} steps={st.steps} "
@@ -88,4 +110,33 @@ def _paged_admission_rows(n, max_new):
                        f"occ={st.block_report['occupancy']:.2f} "
                        f"frag={st.block_report['internal_fragmentation']:.2f}")
     rows.append(row)
+    return rows
+
+
+def _prefix_cache_rows(n, max_new):
+    """Shared-prefix workload (system-prompt style): every prompt repeats
+    the same 3-block prefix ahead of a unique tail. With the prefix cache
+    on, every request after the first serves the shared blocks from cache
+    (skipping their prefill compute); the cache-off row is the ablation."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    max_len, block = 64, 8
+    rng = np.random.default_rng(3)
+    prefix = rng.integers(1, cfg.vocab_size, size=3 * block).astype(np.int32)
+
+    def reqs():
+        r = np.random.default_rng(4)
+        return [ServeRequest(
+            np.concatenate([prefix, r.integers(1, cfg.vocab_size,
+                                               size=4).astype(np.int32)]),
+            max_new_tokens=max_new, arrival_time=i / 2.0)
+            for i in range(n)]
+
+    rows = []
+    for label, cached in (("prefix-paged", True),
+                          ("prefix-paged-nocache", False)):
+        eng = ServeEngine(cfg, max_len=max_len, n_slots=n, cache="paged",
+                          block_size=block, prefix_cache=cached)
+        _, st = eng.run(reqs())
+        rows.append(_row(f"serve/{label}/{arch}", st))
     return rows

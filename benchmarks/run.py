@@ -59,6 +59,16 @@ def main() -> None:
         sys.stdout.flush()
 
     os.makedirs("experiments", exist_ok=True)
+    # A filtered run updates its rows in place instead of clobbering the
+    # other modules' records, so the trajectory file stays complete.
+    if filters and os.path.exists("experiments/bench_results.json"):
+        try:
+            with open("experiments/bench_results.json") as f:
+                prior = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            prior = []
+        fresh = {r["name"] for r in records}
+        records = [r for r in prior if r.get("name") not in fresh] + records
     with open("experiments/bench_results.json", "w") as f:
         json.dump(records, f, indent=2, default=str)
     print(f"# total wall: {time.time() - t_start:.0f}s; "

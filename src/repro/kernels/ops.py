@@ -81,6 +81,29 @@ def paged_attention(q, k_pages, v_pages, tables, pos, window=0):
     return out.reshape(b, hq, d)
 
 
+@jax.jit
+def paged_prefill_attention(q, k_pages, v_pages, tables, start, window=0):
+    """q: [B, C, Hq, D] — one C-token prefill chunk per slot, row b's query
+    c at logical position ``start[b] + c``; k_pages, v_pages:
+    [NB, BS, Hkv, D]; tables: [B, MB] int32 block ids (-1 = unassigned);
+    start: [B] int32; window: int32 scalar (0 = full; dynamic — gemma3's
+    per-layer windows are traced). Returns [B, C, Hq, D]. The chunk's own
+    K/V must already be written through the table (the layer writes before
+    attending), so causal in-chunk attention reads it from the pool. Q
+    heads group per kv head as in ``paged_attention``.
+    """
+    b, c, hq, d = q.shape
+    hkv = k_pages.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    win = jnp.asarray(window, jnp.int32).reshape(1)
+    out = _pa.paged_prefill_bkgd(qg, k_pages, v_pages,
+                                 jnp.asarray(tables, jnp.int32),
+                                 jnp.asarray(start, jnp.int32), win,
+                                 interpret=_interpret())
+    return out.transpose(0, 2, 1, 3, 4).reshape(b, c, hq, d)
+
+
 @functools.partial(jax.jit, static_argnames=("chunk",))
 def ssd_scan(xdt, a_log, B, C, *, chunk: int = 128):
     """xdt: [B, S, H, P]; a_log: [B, S, H]; B, C: [B, S, H, N]."""

@@ -54,6 +54,34 @@ def paged_attention(q, k_pages, v_pages, tables, pos, window=0):
     return out.reshape(b, hq, d).astype(q.dtype)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, tables, start, window=0):
+    """Paged prefill-chunk attention oracle (C query tokens per slot).
+
+    q: [B, C, Hq, D]; k_pages, v_pages: [NB, BS, Hkv, D]; tables: [B, MB]
+    int32 block ids (-1 = unassigned); start: [B] int32 — row b's query c
+    sits at logical position ``start[b] + c`` and attends positions
+    [0, start[b] + c] gathered through its block table (causal inside the
+    chunk). -> [B, C, Hq, D].
+    """
+    nb, bs, hkv, d = k_pages.shape
+    b, c, hq, _ = q.shape
+    safe = jnp.maximum(tables, 0)
+    k = k_pages[safe].reshape(b, -1, hkv, d).astype(jnp.float32)
+    v = v_pages[safe].reshape(b, -1, hkv, d).astype(jnp.float32)
+    k_pos = jnp.arange(k.shape[1])[None, None, :]                # [1, 1, K]
+    q_pos = (start[:, None] + jnp.arange(c)[None, :])[:, :, None]  # [B, C, 1]
+    valid = jnp.repeat(tables >= 0, bs, axis=1)[:, None, :] & (k_pos <= q_pos)
+    if window:
+        valid &= k_pos > q_pos - window
+    g = hq // hkv
+    qg = q.reshape(b, c, hkv, g, d).astype(jnp.float32)
+    logits = jnp.einsum("bchgd,bkhd->bhgck", qg, k) / math.sqrt(d)
+    logits = jnp.where(valid[:, None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgck,bkhd->bchgd", p, v)
+    return out.reshape(b, c, hq, d).astype(q.dtype)
+
+
 def ssd(xdt, a_log, B, C):
     """Naive sequential SSD recurrence (the semantic ground truth).
 

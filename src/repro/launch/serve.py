@@ -9,8 +9,13 @@ round); ``continuous`` bounds the pool to ``--slots`` and joins/evicts per
 decode step. ``--cache paged`` swaps the per-slot max_len cache rows for the
 block-pool cache (attention families): admission is by free *blocks*
 (length-proportional, ``--block-size`` positions each, ``--blocks`` total),
-prompts prefill in block_size chunks, and decode compacts to the live slots
-(the summary reports the saved rows and the pool's occupancy/fragmentation).
+prompts prefill in block_size chunks packed ``--prefill-lanes`` joining
+requests per jitted dispatch, shared prompt prefixes hit the content-hashed
+block cache (``--no-prefix-cache`` to ablate; ``--shared-prefix N`` builds a
+system-prompt-style workload and ``--min-hit-rate`` asserts the cache
+worked), and decode compacts to the live slots (the summary reports the
+saved rows, prefill/decode dispatch counts and wall split, the prefix-cache
+hit rate, and the pool's occupancy/fragmentation).
 ``--mesh host`` executes the jitted decode step TP/DP-sharded over the host
 mesh (forcing an 8-device host platform when run from the CLI, like
 launch/dryrun.py). ``--arrival-rate R`` switches to open-loop arrivals:
@@ -42,15 +47,23 @@ from repro.serve import ServeEngine, ServeRequest, sharded_engine  # noqa: E402
 
 
 def make_requests(cfg, n: int, prompt_len: int, max_new: int,
-                  arrival_rate: float, seed: int = 0):
-    """Mixed-length request set with optional open-loop arrivals."""
+                  arrival_rate: float, seed: int = 0,
+                  shared_prefix: int = 0):
+    """Mixed-length request set with optional open-loop arrivals.
+
+    ``shared_prefix`` prepends the same ``shared_prefix``-token prefix to
+    every prompt (a system-prompt-style workload): with the paged engine's
+    prefix cache on, later requests serve those blocks from cache."""
     rng = np.random.default_rng(seed)
+    prefix = rng.integers(1, cfg.vocab_size,
+                          size=shared_prefix).astype(np.int32)
     reqs = []
     for i in range(n):
         s = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
         arrival = (i / arrival_rate) if arrival_rate > 0 else 0.0
+        tail = rng.integers(1, cfg.vocab_size, size=s).astype(np.int32)
         reqs.append(ServeRequest(
-            rng.integers(1, cfg.vocab_size, size=s).astype(np.int32),
+            np.concatenate([prefix, tail]) if shared_prefix else tail,
             max_new_tokens=max_new, arrival_time=arrival))
     return reqs
 
@@ -76,6 +89,18 @@ def main() -> None:
                          "(0 = slots * ceil(max_len / block_size))")
     ap.add_argument("--watermark", type=float, default=0.05,
                     help="fraction of blocks reserved at admission (paged)")
+    ap.add_argument("--prefill-lanes", type=int, default=4,
+                    help="joining requests prefilled per jitted chunk-round "
+                         "(paged cache)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="disable content-hashed prompt-block sharing (paged)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common prefix tokens to every "
+                         "prompt (prefix-cache workload)")
+    ap.add_argument("--min-hit-rate", type=float, default=None,
+                    help="fail unless the prefix-cache hit rate reaches this "
+                         "fraction (CI assertion)")
     ap.add_argument("--prompt-len", type=int, default=8,
                     help="max prompt length (lengths are mixed in [len/2, len])")
     ap.add_argument("--max-new", type=int, default=16)
@@ -98,6 +123,8 @@ def main() -> None:
     n_blocks = args.blocks or None
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=n_blocks, watermark=args.watermark,
+                     prefill_lanes=args.prefill_lanes,
+                     prefix_cache=args.prefix_cache,
                      temperature=args.temperature, top_k=args.top_k)
 
     if args.mesh == "host":
@@ -109,7 +136,7 @@ def main() -> None:
                              policy=args.policy, **engine_kw)
 
     reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
-                         args.arrival_rate)
+                         args.arrival_rate, shared_prefix=args.shared_prefix)
     out, stats = engine.run(reqs)
 
     record = {
@@ -138,6 +165,13 @@ def main() -> None:
             raise SystemExit(
                 f"FAIL: {len(mismatches)} request(s) diverged from the "
                 f"single-device static engine")
+
+    if args.min_hit_rate is not None \
+            and stats.prefix_hit_rate < args.min_hit_rate:
+        print(json.dumps(record, indent=2))
+        raise SystemExit(
+            f"FAIL: prefix-cache hit rate {stats.prefix_hit_rate:.2f} below "
+            f"the required {args.min_hit_rate:.2f}")
 
     print(json.dumps(record, indent=2))
 

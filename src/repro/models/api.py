@@ -50,7 +50,10 @@ class Model:
     init_paged_cache: Any = None        # (n_blocks, block_size) -> cache
     paged_decode_step: Any = None       # (params, cache, tokens, pos, tables)
     paged_prefill_chunk: Any = None     # (params, cache, tokens, start,
-                                        #  tables, state, cap_tokens)
+                                        #  tables, state, cap_tokens,
+                                        #  n_valid, cap_rows) — lane-batched:
+                                        #  tokens [P, C] packs chunks from P
+                                        #  joining requests into one dispatch
     paged_prefill_state: Any = None     # (batch) -> cross-chunk carry
 
 
@@ -89,9 +92,10 @@ def build_model(cfg: ArchConfig) -> Model:
                                       tables)),
             paged_prefill_chunk=(
                 lambda params, cache, tokens, start, tables, state=None,
-                cap_tokens=0:
+                cap_tokens=0, n_valid=None, cap_rows=None:
                 mod.paged_prefill_chunk(cfg, params, cache, tokens, start,
-                                        tables, state, cap_tokens)),
+                                        tables, state, cap_tokens,
+                                        n_valid=n_valid, cap_rows=cap_rows)),
             paged_prefill_state=(
                 lambda batch=1: mod.paged_prefill_state(cfg, batch)),
         )

@@ -296,15 +296,22 @@ def plan_decode_backend(cfg, kv_cache) -> str:
     return backend
 
 
-def paged_kv_write(pkv: PagedKV, k, v, positions) -> PagedKV:
+def paged_kv_write(pkv: PagedKV, k, v, positions, valid=None) -> PagedKV:
     """Write k/v [B, C, Hkv, D] at logical ``positions`` [B, C] through the
     block table. Rows whose table has no block for a position (padding rows,
     ``tables[b, p // bs] < 0``) are dropped, never scattered into a live
-    block."""
+    block; ``valid`` [B, C] additionally drops padded lane positions of a
+    batched prefill chunk (a short final chunk padded to block_size must not
+    scatter garbage into its own — or, prefix-shared, anyone else's —
+    blocks)."""
     nb, bs = pkv.k.shape[:2]
+    mb = pkv.tables.shape[1]
     p = jnp.asarray(positions, jnp.int32)
-    blk = jnp.take_along_axis(pkv.tables, p // bs, axis=1)
-    blk = jnp.where(blk >= 0, blk, nb)           # out of bounds -> dropped
+    col = jnp.clip(p // bs, 0, mb - 1)           # pad positions may overrun
+    blk = jnp.take_along_axis(pkv.tables, col, axis=1)
+    blk = jnp.where((blk >= 0) & (p // bs < mb), blk, nb)  # oob -> dropped
+    if valid is not None:
+        blk = jnp.where(valid, blk, nb)
     off = p % bs
     nk = pkv.k.at[blk, off].set(k.astype(pkv.k.dtype), mode="drop")
     nv = pkv.v.at[blk, off].set(v.astype(pkv.v.dtype), mode="drop")
@@ -327,25 +334,35 @@ def paged_kv_gather(pkv: PagedKV):
 
 
 def paged_decode_attention(cfg, q, k, v, pkv: PagedKV, positions, window,
-                           scheme):
+                           scheme, valid=None):
     """The "paged" decode-attention backend: write this call's (post-RoPE)
     k/v [B, C, Hkv, D] at ``positions`` [B, C] through the block table, then
     attend q over the gathered pages with the same validity mask semantics as
     the contiguous path (k_pos <= pos, optional sliding window). Handles both
-    decode (C == 1, per-row positions) and chunked prefill (B == 1, a span of
-    positions). Returns (attn out [B, C, Hq, D], (new_k, new_v) block pools).
+    decode (C == 1, per-row positions) and chunked prefill (lane-batched
+    [P, C] chunks at per-lane position spans; ``valid`` [B, C] masks padded
+    lane positions out of the K/V write — their query rows compute garbage
+    that the caller discards). Returns (attn out [B, C, Hq, D],
+    (new_k, new_v) block pools).
 
     ``cfg.use_pallas`` routes single-token decode through the Pallas
-    block-table kernel (kernels/paged_attention.py); chunked prefill and the
-    default path gather pages and reuse ``mha`` so paged outputs stay
+    block-table decode kernel and multi-token chunks through the paged
+    *prefill* kernel (both in kernels/paged_attention.py — positions of a
+    chunk are contiguous per row, which is what the prefill kernel assumes);
+    the default path gathers pages and reuses ``mha`` so paged outputs stay
     token-identical to contiguous decode.
     """
     b, c = q.shape[:2]
-    pkv = paged_kv_write(pkv, k, v, positions)
+    pkv = paged_kv_write(pkv, k, v, positions, valid)
     if cfg.use_pallas and c == 1:
         from repro.kernels import ops as kops
         out = kops.paged_attention(q[:, 0], pkv.k, pkv.v, pkv.tables,
                                    positions[:, 0], window)[:, None]
+        return out, (pkv.k, pkv.v)
+    if cfg.use_pallas and c > 1:
+        from repro.kernels import ops as kops
+        out = kops.paged_prefill_attention(q, pkv.k, pkv.v, pkv.tables,
+                                           positions[:, 0], window)
         return out, (pkv.k, pkv.v)
     kg, vg, k_pos, assigned = paged_kv_gather(pkv)
     kg = shard(kg, "batch", "kv_seq", None, None)
@@ -387,7 +404,7 @@ def update_kv_cache(ck, cv, k, v, cache_pos):
 
 def attention(p, cfg, x, positions, *, causal: bool = True,
               window: int = 0, kv_cache=None, cache_pos=None,
-              cross_kv=None):
+              cross_kv=None, kv_valid=None):
     """Full attention layer.
 
     Modes:
@@ -417,7 +434,8 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
         out, new_cache = paged_decode_attention(cfg, q, k, v, kv_cache,
-                                                positions, window, scheme)
+                                                positions, window, scheme,
+                                                valid=kv_valid)
         return out.reshape(b, s, -1) @ p["wo"], new_cache
     elif kv_cache is not None:
         ck, cv = kv_cache

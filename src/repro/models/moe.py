@@ -56,7 +56,8 @@ def capacity(cfg, n_tokens: int) -> int:
     return max(8, -(-c // 8) * 8)          # round up to 8
 
 
-def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None):
+def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None, token_valid=None,
+            cap_rows=None):
     """x: [B, S, D] -> ([B, S, D], aux_loss[, new_counts]).
 
     Dispatch is computed independently per batch row (vmap) so the dispatch
@@ -70,6 +71,14 @@ def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None):
     the capacity to the full sequence length instead of the chunk length.
     When ``counts`` is given the updated counts are returned as a third
     output.
+
+    ``token_valid``/``cap_rows`` make the layer *lane-batchable* (batched
+    prefill): invalid tokens (the padded tail of a short final chunk) claim
+    no expert slot, contribute no counts, and combine to zero, and
+    ``cap_rows`` [B] int32 pins each lane's *effective* capacity to its own
+    prompt's ``capacity(cfg, len)`` while the dispatch buffer is sized by
+    the static ``cap_tokens`` bound — so every lane routes exactly like a
+    solo one-pass forward over its own prompt.
     """
     b, s, d = x.shape
     e, k = cfg.n_experts, cfg.top_k
@@ -86,16 +95,23 @@ def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None):
     mean_prob = jnp.mean(probs, axis=(0, 1))                     # [E]
     aux = e * jnp.sum(frac_tokens / k * mean_prob)
 
-    def dispatch_row(xt, row_e, row_p, cnt):
+    if token_valid is None:
+        token_valid = jnp.ones((b, s), bool)
+    if cap_rows is None:
+        cap_rows = jnp.full((b,), cap, jnp.int32)
+
+    def dispatch_row(xt, row_e, row_p, cnt, tv, cap_row):
         """xt: [S, D]; row_e/row_p: [S, K]; cnt: [E] carried assignment
-        counts -> ([E, C, D], combine meta, updated counts)."""
+        counts; tv: [S] token validity; cap_row: scalar effective capacity
+        -> ([E, C, D], combine meta, updated counts)."""
         flat_e = row_e.reshape(-1)                               # [S*K]
         flat_p = row_p.reshape(-1)
         flat_tok = jnp.repeat(jnp.arange(s), k)
-        one = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)
+        flat_tv = jnp.repeat(tv, k)
+        one = jax.nn.one_hot(flat_e, e, dtype=jnp.int32) * flat_tv[:, None]
         pos_in_e = (cnt[flat_e]
                     + jnp.cumsum(one, axis=0)[jnp.arange(s * k), flat_e] - 1)
-        keep = pos_in_e < cap
+        keep = (pos_in_e < cap_row) & flat_tv
         safe_pos = jnp.where(keep, pos_in_e, cap - 1)
         if cfg.moe_gather_dispatch:
             # Scatter only int32 slot->token indices (E*C ints), then gather
@@ -116,7 +132,8 @@ def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None):
                 cnt + jnp.sum(one, axis=0))
 
     cnt0 = counts if counts is not None else jnp.zeros((b, e), jnp.int32)
-    buf, meta, new_counts = jax.vmap(dispatch_row)(x, top_e, top_p, cnt0)
+    buf, meta, new_counts = jax.vmap(dispatch_row)(x, top_e, top_p, cnt0,
+                                                   token_valid, cap_rows)
     buf = shard(buf, "batch", "experts", None, None)              # [B, E, C, D]
 
     # expert computation: batched swiglu over the expert axis
@@ -203,14 +220,18 @@ def paged_prefill_state(cfg, batch: int = 1):
 
 
 def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
-                        state=None, cap_tokens: int = 0):
-    """MoE chunked prefill: attention pages through the block table like the
-    dense path; the expert FFN routes with the carried per-layer counts and
-    the full-prompt capacity (``cap_tokens``) so chunked routing equals
-    one-pass routing token for token."""
+                        state=None, cap_tokens: int = 0, n_valid=None,
+                        cap_rows=None):
+    """MoE chunked prefill (lane-batched like the dense path): attention
+    pages through each lane's block table; the expert FFN routes with the
+    carried per-layer counts, drops lane-padding tokens from dispatch, and
+    pins each lane's effective capacity to ``cap_rows`` (its own prompt's
+    ``capacity(cfg, len)``; the static ``cap_tokens`` only sizes the
+    dispatch buffers) so chunked lane-batched routing equals one-pass
+    routing token for token."""
     x = L.embed(params["emb"], cfg, tokens)
     b, c, _ = x.shape
-    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    positions, valid, last = T.prefill_chunk_layout(start, n_valid, b, c)
     if state is None:
         state = paged_prefill_state(cfg, b)
 
@@ -218,11 +239,14 @@ def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
         p, ck, cv, cnt = scanned
         h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
         attn_out, new_kv = L.attention(p["attn"], cfg, h, positions,
-                                       kv_cache=L.PagedKV(ck, cv, tables))
+                                       kv_cache=L.PagedKV(ck, cv, tables),
+                                       kv_valid=valid)
         x = x + attn_out
         h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
         ffn_out, _aux, new_cnt = moe_ffn(cfg, p, h, counts=cnt,
-                                         cap_tokens=cap_tokens)
+                                         cap_tokens=cap_tokens,
+                                         token_valid=valid,
+                                         cap_rows=cap_rows)
         x = shard(x + ffn_out, "batch", None, None)
         return x, (*new_kv, new_cnt)
 
@@ -230,7 +254,8 @@ def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
         cfg, body, x, (params["layers"], cache["k"], cache["v"], state))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["emb"], cfg, x)
-    return logits[:, -1:], {"k": new_k, "v": new_v}, new_counts
+    logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+    return logits, {"k": new_k, "v": new_v}, new_counts
 
 
 def paged_decode_step(cfg, params, cache, tokens, pos, tables):

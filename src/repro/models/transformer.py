@@ -53,11 +53,12 @@ def layer_windows(cfg) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # layer body
 # ---------------------------------------------------------------------------
-def _layer(cfg, p, x, positions, window, kv_cache=None, cache_pos=None):
+def _layer(cfg, p, x, positions, window, kv_cache=None, cache_pos=None,
+           kv_valid=None):
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     # window is a traced per-layer int32 — the mask builder must accept it.
     attn_out, new_cache = _attention_dyn_window(
-        cfg, p["attn"], h, positions, window, kv_cache, cache_pos)
+        cfg, p["attn"], h, positions, window, kv_cache, cache_pos, kv_valid)
     x = x + attn_out
     h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
     x = x + L.mlp(p["mlp"], h)
@@ -65,7 +66,8 @@ def _layer(cfg, p, x, positions, window, kv_cache=None, cache_pos=None):
     return x, new_cache
 
 
-def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos):
+def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos,
+                          kv_valid=None):
     """Attention with a *traced* window size (for scanned local/global mix)."""
     b, s, _ = x.shape
     if isinstance(kv_cache, L.PagedKV):
@@ -81,7 +83,8 @@ def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos):
     new_cache = None
     if backend == "paged":
         out, new_cache = L.paged_decode_attention(cfg, q, k, v, kv_cache,
-                                                  positions, window, scheme)
+                                                  positions, window, scheme,
+                                                  valid=kv_valid)
         return out.reshape(b, s, -1) @ p["wo"], new_cache
     if kv_cache is not None:
         ck, cv = kv_cache
@@ -298,35 +301,60 @@ def paged_prefill_state(cfg, batch: int = 1):
     return None
 
 
-def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
-                        state=None, cap_tokens: int = 0):
-    """Prefill one prompt chunk into the paged cache.
+def prefill_chunk_layout(start, n_valid, b: int, c: int):
+    """Per-token (positions [B, C], valid [B, C] | None, last-index [B])
+    for a (lane-batched) prefill chunk. ``start`` is a scalar (one request)
+    or an int32 [B] vector of per-lane first positions; ``n_valid`` (int32
+    [B] or None) counts the real tokens per lane — the tail of a short
+    final chunk is padding whose K/V writes must be dropped and whose
+    logits are discarded."""
+    start = jnp.asarray(start, jnp.int32)
+    if start.ndim == 0:
+        start = jnp.full((b,), start, jnp.int32)
+    positions = start[:, None] + jnp.arange(c, dtype=jnp.int32)[None, :]
+    if n_valid is None:
+        return positions, None, jnp.full((b,), c - 1, jnp.int32)
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    valid = jnp.arange(c, dtype=jnp.int32)[None, :] < n_valid[:, None]
+    return positions, valid, jnp.clip(n_valid - 1, 0, c - 1)
 
-    tokens: [1, C] (a ``block_size`` slice of the prompt; the last chunk may
-    be shorter); start: int32 scalar — the chunk's first logical position;
-    tables: [1, MB] — the request's block table (blocks covering
-    [0, start + C) must already be assigned). The chunk's K/V is appended
-    through the table and attention spans every cached position, so chaining
-    chunks reproduces the one-pass forward without ever materializing a
-    contiguous max_len row. Returns (last-position logits [1, 1, V],
-    new cache, state).
+
+def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
+                        state=None, cap_tokens: int = 0, n_valid=None,
+                        cap_rows=None):
+    """Prefill one prompt chunk per lane into the paged cache.
+
+    tokens: [P, C] — one ``block_size`` slice of P joining requests' prompts
+    (one jitted dispatch covers a whole chunk-round; P == 1 is the
+    single-request case); start: int32 scalar or [P] — each lane's first
+    logical position; n_valid: int32 [P] or None — real tokens per lane
+    (short final chunks are padded to C; pad positions write nothing and
+    their logits are ignored); tables: [P, MB] — each request's block table
+    (blocks covering its [0, start + n_valid) must already be assigned).
+    ``cap_rows`` is accepted for signature parity with the MoE family and
+    ignored. The chunk's K/V is appended through the table and attention
+    spans every cached position, so chaining chunks reproduces the one-pass
+    forward without ever materializing a contiguous max_len row. Returns
+    (per-lane last-valid-position logits [P, 1, V], new cache, state).
     """
     x = L.embed(params["emb"], cfg, tokens)
     b, c, _ = x.shape
-    positions = start + jnp.arange(c, dtype=jnp.int32)[None, :]
+    positions, valid, last = prefill_chunk_layout(start, n_valid, b, c)
     windows = layer_windows(cfg)
 
     def body(x, scanned):
         p, w, ck, cv = scanned
         x, new_kv = _layer(cfg, p, x, positions, w,
-                           kv_cache=L.PagedKV(ck, cv, tables))
+                           kv_cache=L.PagedKV(ck, cv, tables),
+                           kv_valid=valid)
         return x, new_kv
 
     x, (new_k, new_v) = L.scan_layers(
         cfg, body, x, (params["layers"], windows, cache["k"], cache["v"]))
     x = L.rmsnorm(x, params["final_norm"], cfg.norm_eps)
     logits = L.unembed(params["emb"], cfg, x)
-    return logits[:, -1:], {"k": new_k, "v": new_v}, None
+    logits = jnp.take_along_axis(logits, last[:, None, None], axis=1)
+    return logits, {"k": new_k, "v": new_v}, None
 
 
 def paged_decode_step(cfg, params, cache, tokens, pos, tables):

@@ -5,9 +5,11 @@ The engine sits on top of the serve subsystem's cache mechanisms:
   * ``cache.CachePool``   — one padded cache buffer, per-slot alloc/free
     (the ``contiguous`` backend: every request owns a full max_len row).
   * ``paged.BlockManager`` — one block-pool buffer, per-request block tables
-    (the ``paged`` backend: a request owns ceil(len / block_size) blocks).
+    (the ``paged`` backend: a request owns ceil(len / block_size) blocks),
+    optionally with ref-counted content-hashed prefix caching.
   * ``scheduler.ContinuousScheduler`` — admission + per-step join/evict,
-    FCFS/SJF queue ordering; paged pools admit by free *blocks*.
+    FCFS/SJF queue ordering; paged pools admit by free *blocks*; admitted
+    requests pass through the scheduler's prefill queue.
 
 Every mode is the same engine loop. *Static* batching is the degenerate
 scheduler configuration (all requests arrive at step 0 into a pool with one
@@ -23,17 +25,24 @@ per-request at the exact prompt length — no cross-request padding — so a
 request's output never depends on what it was batched with, which is what
 makes continuous and static batching produce identical per-request outputs.
 
-Prefill (paged): the prompt prefills in ``block_size`` chunks that append
-blocks through the request's table (``paged_prefill_chunk``), so a long
-prompt never needs one contiguous max_len row. MoE chunks carry per-layer
-expert-assignment counts so chunked routing equals one-pass routing.
+Prefill (paged): prompts prefill in ``block_size`` chunks through each
+request's block table, and chunks from up to ``prefill_lanes`` joining
+requests pack into ONE jitted ``[P, block_size]`` dispatch per chunk-round
+(padded lanes masked) — admitting N requests costs O(chunk-rounds)
+dispatches instead of O(N x chunks). Lanes never interact: each lane writes
+through its own table, pad positions write nothing, and MoE lanes carry
+per-lane expert counts and per-lane routing capacity so batched chunked
+routing equals each request's solo one-pass routing. With the prefix cache
+on, a lane starts at its first non-cached block and skips the compute for
+shared prompt blocks entirely.
 
 Decode: one jitted step over the live slots with a per-row ``pos`` vector.
-The contiguous backend decodes the whole pool (inactive slots decode garbage
-that is never read); the paged backend *compacts* the decode batch to the
-active slots (padded to a power-of-two bucket) — the cache is addressed
-through block tables, not slot indices, so compaction is free and idle slots
-cost nothing. The saved work is reported as ``decode_rows_saved``.
+The paged backend *compacts* the decode batch to the active slots (padded
+to a power-of-two bucket) — the cache is addressed through block tables, so
+compaction is free. The contiguous backend reuses the same live-slot
+compaction via a jitted gather-decode-scatter over the pool's batch axes
+(single-device; the sharded pool keeps full-width decode). The saved work
+is reported as ``decode_rows_saved``.
 
 Token selection: greedy by default (the exactness/verify path). With
 ``temperature > 0`` each slot samples on its own RNG lane —
@@ -46,6 +55,7 @@ import contextlib
 import functools
 import math
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -87,11 +97,33 @@ class ServeStats:
     p95_latency_steps: float
     mean_latency_s: float
     max_active: int = 0               # peak concurrently-decoding requests
-    decode_rows_saved: float = 0.0    # idle-slot compaction: fraction of
+    decode_rows_saved: float = 0.0    # live-slot compaction: fraction of
                                       # pool rows never decoded
     preemptions: int = 0              # paged: requests bounced on pool
                                       # pressure (regenerated exactly)
     block_report: Optional[dict] = field(default=None)
+    # -- phase split + dispatch accounting ------------------------------------
+    prefill_s: float = 0.0            # wall seconds inside prefill dispatch
+    decode_s: float = 0.0             # wall seconds inside decode dispatch
+    prefill_dispatches: int = 0       # jitted prefill calls (paged: one per
+                                      # chunk-round across ALL joining lanes)
+    decode_dispatches: int = 0        # jitted decode steps
+    # -- prefix cache ---------------------------------------------------------
+    prefix_blocks_total: int = 0      # prompt blocks allocated (paged)
+    prefix_blocks_hit: int = 0        # of those, served from the cache
+    prefix_hit_rate: float = 0.0
+
+
+@dataclass
+class _PrefillLane:
+    """One live lane of the batched paged prefill: a joining request, its
+    chunk cursor (starting past any prefix-cache hits), and its carried
+    cross-chunk state (MoE expert counts; None for dense/vlm)."""
+    req: ServeRequest
+    prompt: np.ndarray
+    ptr: int
+    cap_row: int
+    state: Optional[np.ndarray]
 
 
 class ServeEngine:
@@ -104,8 +136,11 @@ class ServeEngine:
 
     ``cache="paged"`` (attention families) swaps the per-slot max_len rows
     for the block-pool cache: admission becomes block-granular (a request
-    costs blocks proportional to its length), prefill is chunked, and decode
-    compacts to the live slots. Outputs stay token-identical to contiguous.
+    costs blocks proportional to its length), prefill is chunked and
+    lane-batched across joining requests (``prefill_lanes``), shared prompt
+    prefixes hit the content-addressed block cache (``prefix_cache``), and
+    decode compacts to the live slots. Outputs stay token-identical to
+    contiguous.
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
@@ -114,7 +149,8 @@ class ServeEngine:
                  cache: str = "contiguous", block_size: int = 16,
                  n_blocks: Optional[int] = None, watermark: float = 0.05,
                  temperature: float = 0.0, top_k: int = 0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0, prefill_lanes: int = 4,
+                 prefix_cache: bool = True):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -134,10 +170,13 @@ class ServeEngine:
         self.block_size = block_size
         self.n_blocks = n_blocks
         self.watermark = watermark
+        self.prefill_lanes = max(int(prefill_lanes), 1)
+        self.prefix_cache = bool(prefix_cache)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
         self._sample_key = jax.random.key(sample_seed)
         self._sampler = None
+        self._decode_compact = None
         rng = rng if rng is not None else jax.random.key(0)
         with self._rules():
             self.params = (params if params is not None
@@ -172,6 +211,7 @@ class ServeEngine:
                     out_shardings=(None, sharding.cache_sharding))
             else:
                 self._decode = jax.jit(self.model.decode_step)
+                self._decode_compact = self._decode_compact_fn()
             self._prefill = jax.jit(self._prefill_fn())
 
     def _rules(self):
@@ -213,14 +253,41 @@ class ServeEngine:
         return prefill
 
     def _paged_prefill_fn(self):
-        """Jitted chunk prefill; ``cap`` is static (MoE capacity pinning)."""
+        """Jitted lane-batched chunk prefill; ``cap`` is static (it sizes
+        the MoE dispatch buffers — per-lane effective capacity is the traced
+        ``cap_rows``, so one program covers every prompt length)."""
         mod, cfg = self.model.module, self.cfg
 
-        @functools.partial(jax.jit, static_argnums=(5,))
-        def chunk_fn(params, buffers, tokens, start, tables, cap, state):
+        @functools.partial(jax.jit, static_argnames=("cap",))
+        def chunk_fn(params, buffers, tokens, starts, n_valid, tables, state,
+                     cap_rows, cap):
             return mod.paged_prefill_chunk(cfg, params, buffers, tokens,
-                                           start, tables, state, cap)
+                                           starts, tables, state, cap,
+                                           n_valid=n_valid,
+                                           cap_rows=cap_rows)
         return chunk_fn
+
+    def _decode_compact_fn(self):
+        """Jitted gather-decode-scatter: decode only the pool rows in
+        ``idx`` (live slots + distinct idle pad rows), writing the updated
+        rows back in place — the contiguous mirror of the paged backend's
+        free compaction. Rows decode independently, so the gathered rows'
+        outputs equal a full-pool decode's."""
+        model, max_len = self.model, self.max_len
+        probe_a = jax.eval_shape(lambda: model.init_cache(3, max_len))
+        probe_b = jax.eval_shape(lambda: model.init_cache(5, max_len))
+        from repro.serve.cache import _batch_axis
+        axes = jax.tree_util.tree_map(_batch_axis, probe_a, probe_b)
+
+        def fn(params, buffers, toks, pos, idx):
+            sub = jax.tree_util.tree_map(
+                lambda b, ax: jnp.take(b, idx, axis=ax), buffers, axes)
+            logits, new_sub = model.decode_step(params, sub, toks, pos)
+            out = jax.tree_util.tree_map(
+                lambda b, nb, ax: b.at[(slice(None),) * ax + (idx,)].set(nb),
+                buffers, new_sub, axes)
+            return logits, out
+        return jax.jit(fn)
 
     # -- token selection (greedy / per-slot RNG lanes) -------------------------
     def _make_sampler(self):
@@ -271,6 +338,7 @@ class ServeEngine:
         lat_wall = [r.latency_s for r in reqs if r.latency_s is not None]
         steps = counters["steps"]
         rows_possible = steps * n_slots
+        hit, total = counters["prefix_hits"], counters["prefix_total"]
         stats = ServeStats(
             n_requests=len(reqs),
             new_tokens=new_tokens,
@@ -287,8 +355,22 @@ class ServeEngine:
                                if rows_possible else 0.0),
             preemptions=counters["preemptions"],
             block_report=counters["block_report"],
+            prefill_s=counters["prefill_s"],
+            decode_s=counters["decode_s"],
+            prefill_dispatches=counters["prefill_dispatches"],
+            decode_dispatches=counters["decode_dispatches"],
+            prefix_blocks_total=total,
+            prefix_blocks_hit=hit,
+            prefix_hit_rate=hit / total if total else 0.0,
         )
         return reqs, stats
+
+    @staticmethod
+    def _counters() -> dict:
+        return dict(steps=0, util_acc=0.0, max_active=0, rows_decoded=0,
+                    preemptions=0, block_report=None, prefill_s=0.0,
+                    decode_s=0.0, prefill_dispatches=0, decode_dispatches=0,
+                    prefix_hits=0, prefix_total=0)
 
     def _run_contiguous(self, reqs, n_slots):
         pool = CachePool(self.model, n_slots, self.max_len)
@@ -302,22 +384,26 @@ class ServeEngine:
 
         last = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots,), np.int32)
-        util_acc, steps, max_active = 0.0, 0, 0
-        all_slots = np.arange(n_slots, dtype=np.int32)
+        c = self._counters()
 
         while sched.has_work:
             sched.evict_finished()
-            admitted = sched.admit()
+            sched.admit()
+            admitted = sched.drain_prefill()
+            t0 = time.perf_counter()
             for r in admitted:
                 tokens = jnp.asarray(
                     np.asarray(r.prompt, np.int32))[None, :]
                 logits, row = self._prefill(self.params, tokens)
+                c["prefill_dispatches"] += 1
                 pool.write(r.slot, row)
                 tok = int(self._select_tokens(logits[:, -1], [r.slot],
                                               ~sched.step)[0])
                 r.output.append(tok)
                 last[r.slot, 0] = tok
                 pos[r.slot] = len(r.prompt)
+            if admitted:
+                c["prefill_s"] += time.perf_counter() - t0
             sched.evict_finished()       # satisfied by prefill alone
             if not sched.active:
                 nxt = sched.next_arrival()
@@ -332,42 +418,125 @@ class ServeEngine:
             if self.sharding is not None and admitted:
                 pool.buffers = jax.device_put(
                     pool.buffers, self.sharding.cache_sharding)
-            logits, pool.buffers = self._decode(
-                self.params, pool.buffers, jnp.asarray(last),
-                jnp.asarray(pos))
-            nxt_tok = self._select_tokens(logits[:, -1, :], all_slots,
+
+            # live-slot compaction (single-device): decode only rows with an
+            # active tenant, padded to a power-of-two bucket with DISTINCT
+            # idle rows — their garbage decodes in place exactly as the
+            # full-width step would have, and scatter-back keeps one writer
+            # per row.
+            act = sorted(sched.active)
+            n_act = len(act)
+            bc = _bucket(n_act, n_slots)
+            t0 = time.perf_counter()
+            if self._decode_compact is not None and bc < n_slots:
+                idle = [s for s in range(n_slots) if s not in sched.active]
+                idx = np.asarray(act + idle[:bc - n_act], np.int32)
+                logits, pool.buffers = self._decode_compact(
+                    self.params, pool.buffers, jnp.asarray(last[idx]),
+                    jnp.asarray(pos[idx]), jnp.asarray(idx))
+                rows = np.arange(n_act)           # compacted row order
+                c["rows_decoded"] += bc
+            else:
+                logits, pool.buffers = self._decode(
+                    self.params, pool.buffers, jnp.asarray(last),
+                    jnp.asarray(pos))
+                rows = np.asarray(act)            # slot-indexed rows
+                c["rows_decoded"] += n_slots
+            c["decode_dispatches"] += 1
+            nxt_tok = self._select_tokens(logits[rows, -1, :],
+                                          np.asarray(act, np.int32),
                                           sched.step)
-            for slot, r in sched.active.items():
-                r.output.append(int(nxt_tok[slot]))
-                last[slot, 0] = nxt_tok[slot]
+            c["decode_s"] += time.perf_counter() - t0
+            for i, slot in enumerate(act):
+                r = sched.active[slot]
+                r.output.append(int(nxt_tok[i]))
+                last[slot, 0] = nxt_tok[i]
                 pos[slot] += 1
-            util_acc += len(sched.active) / n_slots
-            max_active = max(max_active, len(sched.active))
-            steps += 1
+            c["util_acc"] += n_act / n_slots
+            c["max_active"] = max(c["max_active"], n_act)
+            c["steps"] += 1
             sched.step += 1
         sched.evict_finished()
-        return dict(steps=steps, util_acc=util_acc, max_active=max_active,
-                    rows_decoded=steps * n_slots, preemptions=0,
-                    block_report=None)
+        return c
 
     # -- paged loop --------------------------------------------------------------
-    def _paged_prefill_request(self, pool: BlockManager, r: ServeRequest,
-                               step: int) -> None:
-        """Chunked prefill: the prompt streams through the request's block
-        table in block_size slices; no contiguous max_len row ever exists."""
-        prompt = np.asarray(r.prompt, np.int32)
-        s = len(prompt)
-        cap = s if self.cfg.family == "moe" else 0
-        state = self.model.paged_prefill_state(1)
-        table = jnp.asarray(pool.table_rows([r.slot]))
-        logits = None
-        for i0 in range(0, s, pool.block_size):
-            chunk = jnp.asarray(prompt[None, i0:i0 + pool.block_size])
-            logits, pool.buffers, state = self._prefill(
-                self.params, pool.buffers, chunk, jnp.int32(i0), table,
-                cap, state)
-        tok = int(self._select_tokens(logits[:, -1], [r.slot], ~step)[0])
-        r.output.append(tok)
+    def _batched_paged_prefill(self, pool: BlockManager, reqs, step: int,
+                               c: dict) -> None:
+        """Prefill all joining requests through up to ``prefill_lanes``
+        lanes in lockstep chunk-rounds: one jitted ``[P, block_size]``
+        dispatch per round covers one chunk of every live lane. A lane
+        starts at its request's first non-cached position (prefix hits skip
+        both blocks and compute), commits each completed full block to the
+        prefix cache, and on its final chunk samples the request's first
+        token from its last-valid-position logits; the freed lane is then
+        refilled from the queue so long prompts never serialize behind
+        short ones."""
+        if not reqs:
+            return
+        bs, mb = pool.block_size, pool.max_blocks
+        is_moe = self.cfg.family == "moe"
+        cap_static = self.max_len if is_moe else 0
+        if is_moe:
+            from repro.models.moe import capacity as moe_capacity
+        queue = deque(reqs)
+        lanes: List[_PrefillLane] = []
+        while queue or lanes:
+            while queue and len(lanes) < self.prefill_lanes:
+                r = queue.popleft()
+                prompt = np.asarray(r.prompt, np.int32)
+                state = pool.resume_state(r.slot)
+                if is_moe and state is None:
+                    state = np.asarray(self.model.paged_prefill_state(1))
+                lanes.append(_PrefillLane(
+                    req=r, prompt=prompt, ptr=pool.cached_tokens(r.slot),
+                    cap_row=(moe_capacity(self.cfg, len(prompt))
+                             if is_moe else 0),
+                    state=state))
+            w = _bucket(len(lanes), self.prefill_lanes)
+            tokens = np.zeros((w, bs), np.int32)
+            starts = np.zeros((w,), np.int32)
+            nv = np.zeros((w,), np.int32)
+            caps = np.zeros((w,), np.int32)
+            tables = np.full((w, mb), -1, np.int32)
+            for i, ln in enumerate(lanes):
+                n = min(bs, len(ln.prompt) - ln.ptr)
+                tokens[i, :n] = ln.prompt[ln.ptr:ln.ptr + n]
+                starts[i], nv[i], caps[i] = ln.ptr, n, ln.cap_row
+                tables[i] = pool.tables[ln.req.slot]
+            state = None
+            if is_moe:
+                cols = [ln.state for ln in lanes]
+                cols += [np.zeros_like(cols[0])] * (w - len(lanes))
+                state = jnp.asarray(np.concatenate(cols, axis=1))
+            logits, pool.buffers, new_state = self._prefill(
+                self.params, pool.buffers, jnp.asarray(tokens),
+                jnp.asarray(starts), jnp.asarray(nv), jnp.asarray(tables),
+                state, jnp.asarray(caps), cap=cap_static)
+            c["prefill_dispatches"] += 1
+            if new_state is not None:
+                new_state = np.asarray(new_state)
+            done_idx: List[int] = []
+            live: List[_PrefillLane] = []
+            for i, ln in enumerate(lanes):
+                n = int(nv[i])
+                if new_state is not None:
+                    ln.state = new_state[:, i:i + 1]
+                if n == bs:        # a full block is final: cacheable
+                    pool.commit_block(
+                        ln.req.slot, ln.ptr // bs,
+                        None if ln.state is None else ln.state.copy())
+                ln.ptr += n
+                if ln.ptr >= len(ln.prompt):
+                    done_idx.append(i)
+                else:
+                    live.append(ln)
+            if done_idx:
+                slots = [lanes[i].req.slot for i in done_idx]
+                toks = self._select_tokens(
+                    logits[np.asarray(done_idx), -1], slots, ~step)
+                for t, i in zip(toks, done_idx):
+                    lanes[i].req.output.append(int(t))
+            lanes = live
 
     def _ensure_growth(self, sched, pool: BlockManager, pos) -> int:
         """Guarantee a block for every active row's next write position,
@@ -392,7 +561,8 @@ class ServeEngine:
         pool = BlockManager(self.model, n_slots, self.max_len,
                             block_size=self.block_size,
                             n_blocks=self.n_blocks,
-                            watermark=self.watermark)
+                            watermark=self.watermark,
+                            prefix_cache=self.prefix_cache)
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
@@ -403,19 +573,22 @@ class ServeEngine:
 
         last = np.zeros((n_slots, 1), np.int32)
         pos = np.zeros((n_slots,), np.int32)
-        util_acc, steps, max_active = 0.0, 0, 0
-        rows_decoded, preemptions = 0, 0
+        c = self._counters()
         peak_report = pool.report()
 
         while sched.has_work:
             sched.evict_finished()
-            admitted = sched.admit()
-            for r in admitted:
-                self._paged_prefill_request(pool, r, sched.step)
-                last[r.slot, 0] = r.output[-1]
-                pos[r.slot] = len(r.prompt)
-            if admitted:                 # pool pressure peaks can be
-                snap = pool.report()     # prefill-only (max_new == 1 runs)
+            sched.admit()
+            admitted = sched.drain_prefill()
+            if admitted:
+                t0 = time.perf_counter()
+                self._batched_paged_prefill(pool, admitted, sched.step, c)
+                c["prefill_s"] += time.perf_counter() - t0
+                for r in admitted:
+                    last[r.slot, 0] = r.output[-1]
+                    pos[r.slot] = len(r.prompt)
+                snap = pool.report()     # pool pressure peaks can be
+                                         # prefill-only (max_new == 1 runs)
                 if snap["used_blocks"] >= peak_report["used_blocks"]:
                     peak_report = snap
             sched.evict_finished()       # satisfied by prefill alone
@@ -433,7 +606,7 @@ class ServeEngine:
             if self.sharding is not None and admitted:
                 pool.buffers = jax.device_put(
                     pool.buffers, self.sharding.cache_sharding)
-            preemptions += self._ensure_growth(sched, pool, pos)
+            c["preemptions"] += self._ensure_growth(sched, pool, pos)
 
             # live-slot compaction: decode only rows with an active tenant,
             # padded to a power-of-two bucket (pad rows carry all -1 tables,
@@ -447,29 +620,33 @@ class ServeEngine:
             tables = np.full((bc, pool.max_blocks), -1, np.int32)
             tables[:len(act)] = pool.table_rows(act)
 
+            t0 = time.perf_counter()
             logits, pool.buffers = self._decode(
                 self.params, pool.buffers, jnp.asarray(toks),
                 jnp.asarray(p), jnp.asarray(tables))
+            c["decode_dispatches"] += 1
             nxt_tok = self._select_tokens(logits[:len(act), -1, :],
                                           np.asarray(act, np.int32),
                                           sched.step)
+            c["decode_s"] += time.perf_counter() - t0
             for i, slot in enumerate(act):
                 r = sched.active[slot]
                 r.output.append(int(nxt_tok[i]))
                 last[slot, 0] = nxt_tok[i]
                 pos[slot] += 1
-            util_acc += len(act) / n_slots
-            max_active = max(max_active, len(act))
-            rows_decoded += bc
-            steps += 1
+            c["util_acc"] += len(act) / n_slots
+            c["max_active"] = max(c["max_active"], len(act))
+            c["rows_decoded"] += bc
+            c["steps"] += 1
             sched.step += 1
             snap = pool.report()
             if snap["used_blocks"] >= peak_report["used_blocks"]:
                 peak_report = snap          # report the pool at peak pressure
         sched.evict_finished()
-        return dict(steps=steps, util_acc=util_acc, max_active=max_active,
-                    rows_decoded=rows_decoded, preemptions=preemptions,
-                    block_report=peak_report)
+        c["block_report"] = peak_report
+        c["prefix_hits"] = pool.prefix_blocks_hit
+        c["prefix_total"] = pool.prefix_blocks_total
+        return c
 
     def generate(self, requests: List[ServeRequest]) -> List[ServeRequest]:
         """Run a batch of requests to completion; returns them."""

@@ -18,14 +18,49 @@ re-admission — prefill is deterministic).
 Blocks and decode slots are both recycled FIFO, mirroring ``CachePool``'s
 recycling discipline, and a freed request's table row is cleared to -1 so a
 re-issued block can never be read through a stale table.
+
+Prefix caching (``prefix_cache=True``) adds a content-addressed layer on
+top: every FULL prompt block is identified by a rolling hash of its tokens
+chained to its predecessor's hash, so "same hash" implies "same prompt
+prefix" and therefore — prefill being deterministic — identical K/V
+content. A request whose leading hashes are already cached *shares* those
+blocks (ref-counted) and skips both their allocation and their prefill
+compute; only the unshared suffix is computed. The partial tail block is
+always privately allocated (copy-on-write discipline: shared blocks are
+never written after their owner's prefill, appends land in fresh blocks),
+so a tenant's decode can never corrupt a neighbour's prefix. Blocks whose
+refcount drops to zero stay cached in an *evictable* FIFO and are only
+reclaimed when the free list runs dry — a re-arriving prefix revives them
+for free. For MoE, the per-layer expert-assignment counts after each block
+are snapshotted alongside the hash (and the routing capacity is folded into
+the hash seed), so a prefix-hit resume routes token-for-token like a cold
+prefill.
 """
 from __future__ import annotations
 
+import hashlib
 import math
-from collections import deque
-from typing import Dict, Optional
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
+
+
+@dataclass
+class _PrefixEntry:
+    """One cached full prompt block: hash -> (block id, refcount, state).
+
+    ``ready`` flips when the owning request's prefill has actually written
+    the block's K/V (``commit_block``); a hit on an unready entry defers the
+    hitting request instead of reading half-written content. ``state`` is
+    the family's cross-chunk prefill carry *after* this block (MoE expert
+    counts; None for dense/vlm).
+    """
+    block: int
+    refs: int = 0
+    ready: bool = False
+    state: object = field(default=None, repr=False)
 
 
 class BlockManager:
@@ -34,12 +69,14 @@ class BlockManager:
     Exposes the pool surface ``ContinuousScheduler`` drives — ``alloc_for`` /
     ``free`` / ``max_len`` / ``validate_request`` — plus the block-granular
     calls the paged engine uses per step (``ensure``, ``table_rows``,
-    ``report``).
+    ``report``) and the prefix-cache surface (``cached_tokens``,
+    ``resume_state``, ``commit_block``).
     """
 
     def __init__(self, model, n_slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
-                 watermark: float = 0.05, dtype=None):
+                 watermark: float = 0.05, dtype=None,
+                 prefix_cache: bool = False):
         if model.init_paged_cache is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode cache "
@@ -60,6 +97,21 @@ class BlockManager:
         self._in_use: set = set()
         self.tables = np.full((n_slots, self.max_blocks), -1, np.int32)
         self._lengths = np.zeros((n_slots,), np.int64)  # tokens owned
+        # -- prefix cache ----------------------------------------------------
+        self.prefix_cache = prefix_cache
+        self._entries: Dict[int, _PrefixEntry] = {}       # hash -> entry
+        self._evictable: "OrderedDict[int, None]" = OrderedDict()  # FIFO
+        #: per-slot chain of (hash | None, owned) for the prompt's full
+        #: blocks; None marks a private block (hash already owned elsewhere)
+        self._chains: Dict[int, List[Tuple[Optional[int], bool]]] = {}
+        self._cached_tokens = np.zeros((n_slots,), np.int64)
+        self._resume: Dict[int, object] = {}
+        self.prefix_blocks_total = 0   # full+partial prompt blocks allocated
+        self.prefix_blocks_hit = 0     # of those, served from the cache
+        #: True iff the LAST alloc_for returned None because a donor was
+        #: still prefilling (vs pool exhaustion) — the scheduler admits
+        #: unrelated requests past a deferral but stops on exhaustion.
+        self.deferred_last_alloc = False
 
     # -- block math ----------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -71,11 +123,45 @@ class BlockManager:
 
     @property
     def free_blocks(self) -> int:
-        return len(self._free_blocks)
+        """Blocks available to allocation: truly free + evictable cached."""
+        return len(self._free_blocks) + len(self._evictable)
+
+    @property
+    def evictable_blocks(self) -> int:
+        return len(self._evictable)
 
     @property
     def in_use(self):
         return frozenset(self._in_use)
+
+    # -- prefix hashing ------------------------------------------------------
+    def _hash_chain(self, prompt: np.ndarray) -> List[int]:
+        """Rolling content hashes of the prompt's FULL blocks. The seed folds
+        in the routing capacity for MoE (two prompts sharing tokens but not
+        capacity must not share blocks — capacity drops would differ)."""
+        salt = 0
+        if self.model.cfg.family == "moe":
+            from repro.models.moe import capacity
+            salt = capacity(self.model.cfg, len(prompt))
+        prev = salt.to_bytes(8, "little", signed=True)
+        hashes = []
+        for i0 in range(0, (len(prompt) // self.block_size) * self.block_size,
+                        self.block_size):
+            h = hashlib.blake2b(
+                prev + np.ascontiguousarray(
+                    prompt[i0:i0 + self.block_size], np.int64).tobytes(),
+                digest_size=16).digest()
+            hashes.append(int.from_bytes(h, "little"))
+            prev = h
+        return hashes
+
+    def _take_block(self) -> int:
+        """A free block, evicting the oldest refcount-0 cached block if the
+        free list is dry (its hash entry is dropped: content unreachable)."""
+        if self._free_blocks:
+            return self._free_blocks.popleft()
+        h, _ = self._evictable.popitem(last=False)
+        return self._entries.pop(h).block
 
     # -- admission -----------------------------------------------------------
     def validate_request(self, req) -> None:
@@ -96,51 +182,162 @@ class BlockManager:
                 f"which can never clear the {self.watermark_blocks}-block "
                 f"admission watermark on a {self.n_blocks}-block pool")
 
+    def _blocks_clear_watermark(self, n_new_blocks: int) -> bool:
+        """The single watermark rule: ``n_new_blocks`` fresh blocks fit
+        while the reserve stays free (``can_admit`` and ``alloc_for`` must
+        agree — alloc_for charges only the non-cached blocks)."""
+        return self.free_blocks - n_new_blocks >= self.watermark_blocks
+
     def can_admit(self, n_tokens: int) -> bool:
         """Watermark admission: prompt blocks fit AND the high-watermark
-        reserve stays free for decode growth of already-admitted tenants."""
+        reserve stays free for decode growth of already-admitted tenants.
+        (Cache-blind: a prompt with cached prefix blocks may be admissible
+        even when this returns False — ``alloc_for`` is the authority.)"""
         return (bool(self._free_slots)
-                and (self.free_blocks - self.blocks_for(n_tokens)
-                     >= self.watermark_blocks))
+                and self._blocks_clear_watermark(self.blocks_for(n_tokens)))
 
     def alloc_for(self, req) -> Optional[int]:
         """Admit ``req``: claim a slot + its prompt's blocks; None if the
-        watermark would be violated (the scheduler keeps it queued)."""
+        watermark would be violated (the scheduler keeps it queued).
+
+        With the prefix cache on, the prompt's leading full blocks are
+        looked up by content hash: ready hits are *shared* (refcount++, no
+        new block, no prefill compute — ``cached_tokens`` tells the engine
+        where to resume); a hit on a block another tenant is still
+        prefilling returns None, deferring the request one round so it can
+        share the finished block instead of racing the writer. The last
+        chunk is never served from cache — its logits seed the first
+        generated token."""
         n = len(req.prompt)
-        if not self.can_admit(n):
+        need = self.blocks_for(n)
+        hashes: List[int] = []
+        hits = 0
+        self.deferred_last_alloc = False
+        if self.prefix_cache:
+            # the chain is pure content: memoize it on the (immutable-prompt)
+            # request so per-step admission retries do not rehash.
+            memo_key = (self.block_size, self.model.cfg.arch_id)
+            memo = getattr(req, "_prefix_hashes", None)
+            if memo is not None and memo[0] == memo_key:
+                hashes = memo[1]
+            else:
+                hashes = self._hash_chain(np.asarray(req.prompt))
+                req._prefix_hashes = (memo_key, hashes)
+            hit_cap = (n - 1) // self.block_size
+            for idx, h in enumerate(hashes[:hit_cap]):
+                e = self._entries.get(h)
+                if e is None:
+                    break
+                if not e.ready:
+                    # donor mid-prefill: join next round (the scheduler may
+                    # still admit unrelated requests this round)
+                    self.deferred_last_alloc = True
+                    return None
+                hits += 1
+        if (not self._free_slots
+                or not self._blocks_clear_watermark(need - hits)):
             return None
         slot = self._free_slots.popleft()
         self._in_use.add(slot)
-        for j in range(self.blocks_for(n)):
-            self.tables[slot, j] = self._free_blocks.popleft()
+        chain: List[Tuple[Optional[int], bool]] = []
+        for j in range(need):
+            if j < hits:
+                e = self._entries[hashes[j]]
+                if e.refs == 0:
+                    self._evictable.pop(hashes[j], None)
+                e.refs += 1
+                self.tables[slot, j] = e.block
+                chain.append((hashes[j], False))
+            else:
+                self.tables[slot, j] = self._take_block()
+                if self.prefix_cache and j < len(hashes):
+                    if hashes[j] in self._entries:
+                        chain.append((None, False))   # hash owned elsewhere
+                    else:
+                        self._entries[hashes[j]] = _PrefixEntry(
+                            block=int(self.tables[slot, j]), refs=1)
+                        chain.append((hashes[j], True))
         self._lengths[slot] = n
+        if self.prefix_cache:
+            self._chains[slot] = chain
+            self._cached_tokens[slot] = hits * self.block_size
+            self._resume[slot] = (self._entries[hashes[hits - 1]].state
+                                  if hits else None)
+            self.prefix_blocks_total += need
+            self.prefix_blocks_hit += hits
         return slot
+
+    # -- prefix-cache surface (engine prefill hooks) --------------------------
+    def cached_tokens(self, slot: int) -> int:
+        """Prompt positions already covered by cache hits: prefill resumes
+        here (0 when the prefix cache is off or missed)."""
+        return int(self._cached_tokens[slot])
+
+    def resume_state(self, slot: int):
+        """The cross-chunk prefill carry snapshotted after the last hit
+        block (MoE expert counts), or None for a cold start."""
+        return self._resume.get(slot)
+
+    def commit_block(self, slot: int, block_idx: int, state=None) -> None:
+        """Mark a prompt block's content written (the engine calls this as
+        its prefill finishes each full block): the entry becomes hittable
+        and carries the prefill state snapshot for MoE-exact resumes."""
+        chain = self._chains.get(slot, ())
+        if block_idx >= len(chain):
+            return
+        h, owned = chain[block_idx]
+        if not owned or h is None:
+            return
+        e = self._entries.get(h)
+        if e is not None and e.block == int(self.tables[slot, block_idx]):
+            e.ready = True
+            e.state = state
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot`` to cover ``n_tokens`` positions (decode append).
-        May eat into the watermark reserve; False when the pool is dry."""
+        May eat into the watermark reserve; False when the pool is dry.
+        Growth blocks are always private — appends never touch a shared
+        prefix block (the copy-on-write discipline)."""
         if slot not in self._in_use:
             raise ValueError(f"slot {slot} is not allocated")
         have = int((self.tables[slot] >= 0).sum())
         while have * self.block_size < n_tokens:
-            if not self._free_blocks:
+            if not self._free_blocks and not self._evictable:
                 return False
-            self.tables[slot, have] = self._free_blocks.popleft()
+            self.tables[slot, have] = self._take_block()
             have += 1
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
         return True
 
     def free(self, slot: int) -> None:
         """Release a request's slot and blocks (FIFO recycle, stale table
-        entries cleared so re-issued blocks are unreachable)."""
+        entries cleared so re-issued blocks are unreachable). Shared prefix
+        blocks are only de-referenced: at refcount 0 they park in the
+        evictable FIFO — still hittable — until the free list runs dry."""
         if slot not in self._in_use:
             raise ValueError(f"slot {slot} is not allocated")
         self._in_use.remove(slot)
+        chain = self._chains.pop(slot, ())
         for j in range(self.max_blocks):
-            if self.tables[slot, j] >= 0:
-                self._free_blocks.append(int(self.tables[slot, j]))
+            blk = int(self.tables[slot, j])
+            if blk < 0:
+                continue
+            h = chain[j][0] if j < len(chain) else None
+            e = self._entries.get(h) if h is not None else None
+            if e is not None and e.block == blk:
+                e.refs -= 1
+                if e.refs == 0:
+                    if e.ready:
+                        self._evictable[h] = None
+                    else:       # owner bailed before writing: unservable
+                        del self._entries[h]
+                        self._free_blocks.append(blk)
+            else:
+                self._free_blocks.append(blk)
         self.tables[slot] = -1
         self._lengths[slot] = 0
+        self._cached_tokens[slot] = 0
+        self._resume.pop(slot, None)
         self._free_slots.append(slot)
 
     # -- decode-step views ---------------------------------------------------
@@ -150,7 +347,9 @@ class BlockManager:
 
     # -- occupancy / fragmentation -------------------------------------------
     def report(self) -> Dict[str, float]:
-        """Occupancy + fragmentation snapshot (CLI summary / tests)."""
+        """Occupancy + fragmentation snapshot (CLI summary / tests). Shared
+        blocks count once toward ``used_blocks`` but every tenant's tokens
+        count toward ``used_tokens``, so fragmentation is clamped at 0."""
         used_blocks = self.n_blocks - self.free_blocks
         allocated = used_blocks * self.block_size
         used_tokens = int(self._lengths.sum())
@@ -159,12 +358,15 @@ class BlockManager:
             "block_size": self.block_size,
             "used_blocks": used_blocks,
             "free_blocks": self.free_blocks,
+            "evictable_blocks": self.evictable_blocks,
             "watermark_blocks": self.watermark_blocks,
             "occupancy": used_blocks / self.n_blocks if self.n_blocks else 0.0,
             "used_tokens": used_tokens,
             "allocated_tokens": allocated,
             # internal fragmentation: allocated-but-unused tail positions of
             # each tenant's last block.
-            "internal_fragmentation": (1.0 - used_tokens / allocated
-                                       if allocated else 0.0),
+            "internal_fragmentation": max(
+                0.0, 1.0 - used_tokens / allocated) if allocated else 0.0,
+            "prefix_blocks_total": self.prefix_blocks_total,
+            "prefix_blocks_hit": self.prefix_blocks_hit,
         }

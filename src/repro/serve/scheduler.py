@@ -18,6 +18,7 @@ mid-flight.
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
@@ -80,6 +81,10 @@ class ContinuousScheduler:
         self.policy: Policy = SERVE_POLICIES[policy]()
         self.waiting: List[ServeRequest] = []
         self.active: Dict[int, ServeRequest] = {}
+        #: admitted-but-not-yet-prefilled requests: the engine drains this
+        #: queue into its prefill lanes, so joins admitted in one round are
+        #: co-scheduled into shared chunk-round dispatches.
+        self.prefill_queue: deque = deque()
         self.step: int = 0
 
     def submit(self, req: ServeRequest) -> None:
@@ -112,14 +117,26 @@ class ContinuousScheduler:
             slot = (self.pool.alloc_for(req)
                     if hasattr(self.pool, "alloc_for") else self.pool.alloc())
             if slot is None:
+                # a prefix-cache deferral (donor still prefilling) parks only
+                # THAT request — unrelated admissible requests behind it must
+                # not wait a round; pool exhaustion still ends the scan.
+                if getattr(self.pool, "deferred_last_alloc", False):
+                    continue
                 break
             req.slot = slot
             req.admitted_at = float(self.step)
             req.t_admitted = time.perf_counter()
             self.active[slot] = req
             self.waiting.remove(req)
+            self.prefill_queue.append(req)
             admitted.append(req)
         return admitted
+
+    def drain_prefill(self) -> List[ServeRequest]:
+        """All admitted requests awaiting prefill (clears the queue)."""
+        items = list(self.prefill_queue)
+        self.prefill_queue.clear()
+        return items
 
     def preempt(self, req: ServeRequest) -> None:
         """Return an active request to the queue under block-pool pressure.

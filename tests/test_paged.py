@@ -365,3 +365,202 @@ def test_sharded_paged_matches_single_device_contiguous():
     # the paged pool's K/V leaves really are laid out sharded
     shardings = jax.tree_util.tree_leaves(eng.sharding.cache_sharding)
     assert shardings and all(not s.is_fully_replicated for s in shardings)
+
+
+# ---------------------------------------------------------------------------
+# prefix cache: refcounting, copy-on-write tail, token identity
+# ---------------------------------------------------------------------------
+def _prefix_pool(**over):
+    kw = dict(n_slots=4, max_len=32, block_size=4, n_blocks=16,
+              watermark=0.0, prefix_cache=True)
+    kw.update(over)
+    return BlockManager(_model(), **kw)
+
+
+def _commit_full_blocks(pool, slot, prompt_len):
+    """Simulate the engine's prefill marking each full block written."""
+    for j in range(prompt_len // pool.block_size):
+        pool.commit_block(slot, j, None)
+
+
+def test_prefix_cache_shares_full_blocks_and_defers_unready():
+    pool = _prefix_pool()
+    prompt = np.arange(1, 15, dtype=np.int32)          # 14 tokens: 3F + 1P
+    a = pool.alloc_for(ServeRequest(prompt, max_new_tokens=2))
+    # same prompt while the donor has not prefilled yet: deferred, not raced
+    assert pool.alloc_for(ServeRequest(prompt.copy(), max_new_tokens=2)) \
+        is None
+    _commit_full_blocks(pool, a, len(prompt))
+    b = pool.alloc_for(ServeRequest(prompt.copy(), max_new_tokens=2))
+    assert b is not None
+    # the three full prefix blocks alias; the partial tail never does
+    assert list(pool.tables[b][:3]) == list(pool.tables[a][:3])
+    assert pool.tables[b][3] != pool.tables[a][3]
+    assert pool.cached_tokens(b) == 3 * pool.block_size
+    assert pool.cached_tokens(a) == 0
+    # shared blocks are counted once: 4 (donor) + 1 (tail) blocks in use
+    assert pool.free_blocks == pool.n_blocks - 5
+
+
+def test_prefix_cache_last_chunk_never_served_from_cache():
+    """A block-aligned prompt keeps its final chunk out of the hit range —
+    its logits seed the first generated token, so it must be computed."""
+    pool = _prefix_pool()
+    prompt = np.arange(1, 13, dtype=np.int32)          # 12 tokens: 3 full
+    a = pool.alloc_for(ServeRequest(prompt, max_new_tokens=2))
+    _commit_full_blocks(pool, a, len(prompt))
+    b = pool.alloc_for(ServeRequest(prompt.copy(), max_new_tokens=2))
+    assert pool.cached_tokens(b) == 2 * pool.block_size   # not 3
+    assert pool.tables[b][2] != pool.tables[a][2]
+
+
+def test_prefix_cache_refcount_free_preempt_cycles_leak_no_blocks():
+    pool = _prefix_pool()
+    prompt = np.arange(1, 15, dtype=np.int32)
+    for cycle in range(3):
+        a = pool.alloc_for(ServeRequest(prompt, max_new_tokens=2))
+        _commit_full_blocks(pool, a, len(prompt))
+        b = pool.alloc_for(ServeRequest(prompt.copy(), max_new_tokens=2))
+        pool.free(a)                                   # donor leaves first
+        pool.free(b)                                   # then the sharer
+        # every block is reclaimable; the prefix blocks stay cached
+        assert pool.free_blocks == pool.n_blocks
+        assert pool.evictable_blocks == 3
+    # a re-arrival revives the evictable blocks instead of recomputing
+    c = pool.alloc_for(ServeRequest(prompt.copy(), max_new_tokens=2))
+    assert pool.cached_tokens(c) == 3 * pool.block_size
+    pool.free(c)
+    assert pool.free_blocks == pool.n_blocks
+
+
+def test_prefix_cache_eviction_reclaims_cached_blocks():
+    pool = _prefix_pool(n_blocks=4)
+    prompt = np.arange(1, 15, dtype=np.int32)          # needs all 4 blocks
+    a = pool.alloc_for(ServeRequest(prompt, max_new_tokens=2))
+    _commit_full_blocks(pool, a, len(prompt))
+    pool.free(a)
+    assert pool.evictable_blocks == 3
+    other = np.arange(100, 114, dtype=np.int32)        # distinct content
+    b = pool.alloc_for(ServeRequest(other, max_new_tokens=2))
+    assert b is not None and pool.cached_tokens(b) == 0
+    assert pool.evictable_blocks == 0                  # cache was evicted
+    pool.free(b)
+    assert pool.free_blocks == pool.n_blocks
+
+
+@pytest.mark.parametrize("arch", PAGED_ARCHS)
+def test_prefix_hit_prefill_token_identical_to_cold(arch):
+    """Shared-prefix requests served with the prefix cache on must be
+    token-for-token identical to cold contiguous-static serving, while a
+    majority of their prompt blocks come from the cache (dense / moe — the
+    carried expert-counts snapshot — / vlm)."""
+    cfg = get_config(arch, smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    rng = np.random.default_rng(11)
+    common = rng.integers(1, cfg.vocab_size, size=12).astype(np.int32)
+
+    def reqs():
+        r = np.random.default_rng(12)
+        return [ServeRequest(
+            np.concatenate([common,
+                            r.integers(1, cfg.vocab_size,
+                                       size=3 + i).astype(np.int32)]),
+            max_new_tokens=4) for i in range(4)]
+
+    cold, _ = ServeEngine(cfg, params=params, max_len=32).run(reqs())
+    warm, stats = ServeEngine(cfg, params=params, max_len=32, n_slots=4,
+                              cache="paged", block_size=4).run(reqs())
+    for a, b in zip(cold, warm):
+        assert a.output == b.output
+    assert stats.prefix_blocks_hit > 0
+    assert stats.prefix_hit_rate >= 0.5
+
+
+def test_prefix_cache_off_is_hit_free_and_identical():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    prompt = np.arange(1, 14, dtype=np.int32)
+    reqs = lambda: [ServeRequest(prompt.copy(), max_new_tokens=4)
+                    for _ in range(3)]
+    on, s_on = ServeEngine(cfg, params=params, max_len=32, n_slots=3,
+                           cache="paged", block_size=4).run(reqs())
+    off, s_off = ServeEngine(cfg, params=params, max_len=32, n_slots=3,
+                             cache="paged", block_size=4,
+                             prefix_cache=False).run(reqs())
+    for a, b in zip(on, off):
+        assert a.output == b.output
+    assert s_on.prefix_blocks_hit > 0
+    assert s_off.prefix_blocks_hit == 0 and s_off.prefix_blocks_total == 0
+
+
+# ---------------------------------------------------------------------------
+# batched prefill lanes
+# ---------------------------------------------------------------------------
+def test_batched_prefill_one_dispatch_per_chunk_round():
+    """N equal-length requests joining together must prefill in
+    O(chunk-rounds) dispatches at N lanes — not O(N x chunks) — and still
+    match single-lane serving token for token."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths = [12, 12, 12, 12]                       # 3 chunks each at bs=4
+    reqs = lambda: _requests(cfg, lengths, max_new=3)
+
+    wide, sw = ServeEngine(cfg, params=params, max_len=32, n_slots=4,
+                           cache="paged", block_size=4, prefix_cache=False,
+                           prefill_lanes=4).run(reqs())
+    narrow, sn = ServeEngine(cfg, params=params, max_len=32, n_slots=4,
+                             cache="paged", block_size=4, prefix_cache=False,
+                             prefill_lanes=1).run(reqs())
+    for a, b in zip(wide, narrow):
+        assert a.output == b.output
+    assert sw.prefill_dispatches == 3                # one per chunk round
+    assert sn.prefill_dispatches == 12               # one per request-chunk
+
+
+def test_batched_prefill_mixed_lengths_lane_refill():
+    """Lanes refill from the queue as short prompts finish, and padded tail
+    chunks never perturb outputs (pad positions write no K/V)."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths = [13, 2, 7, 5, 11, 3]
+    static, _ = ServeEngine(cfg, params=params, max_len=32).run(
+        _requests(cfg, lengths))
+    lanes, st = ServeEngine(cfg, params=params, max_len=32, n_slots=6,
+                            cache="paged", block_size=4,
+                            prefill_lanes=2).run(_requests(cfg, lengths))
+    for a, b in zip(static, lanes):
+        assert a.output == b.output
+    assert st.prefill_dispatches < sum(-(-s // 4) for s in lengths)
+
+
+# ---------------------------------------------------------------------------
+# dispatch/time split accounting
+# ---------------------------------------------------------------------------
+def test_stats_phase_split_and_dispatch_counts():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    _, st = ServeEngine(cfg, max_len=32, n_slots=2, cache="paged",
+                        block_size=4).run(_requests(cfg, [5, 6], max_new=3))
+    assert st.prefill_dispatches > 0 and st.decode_dispatches > 0
+    assert st.prefill_s > 0.0 and st.decode_s > 0.0
+    assert st.decode_dispatches == st.steps
+
+
+def test_deferred_sharer_does_not_block_unrelated_admission():
+    """A request deferred behind a mid-prefill donor parks only itself:
+    unrelated admissible requests behind it in FCFS order still admit in
+    the same round (deferral is not pool exhaustion)."""
+    from repro.serve import ContinuousScheduler
+    pool = _prefix_pool()
+    sched = ContinuousScheduler(pool)
+    x = np.arange(1, 15, dtype=np.int32)
+    y = np.arange(50, 64, dtype=np.int32)
+    a = ServeRequest(x, max_new_tokens=2)
+    b = ServeRequest(x.copy(), max_new_tokens=2)     # shares a's prefix
+    c = ServeRequest(y, max_new_tokens=2)            # unrelated
+    for r in (a, b, c):
+        sched.submit(r)
+    admitted = sched.admit()
+    assert a in admitted and c in admitted and b not in admitted
+    _commit_full_blocks(pool, a.slot, len(x))
+    assert sched.admit() == [b]
+    assert pool.cached_tokens(b.slot) == 3 * pool.block_size
