@@ -1,11 +1,18 @@
 """Serve engines — static vs continuous vs sharded-continuous tokens/s for an
 attention-family and an ssm-family architecture, plus paged-vs-contiguous
-admission density at mixed prompt lengths and a shared-prefix (prefix-cache)
-workload (smoke shapes; set BENCH_FULL=1 for a larger request set).
+admission density at mixed prompt lengths, a shared-prefix (prefix-cache)
+workload, and a decode-horizon K=1 vs K=8 ablation (smoke shapes; set
+BENCH_FULL=1 for a larger request set). Rows measure the *second* run of
+each engine (``_run_warm``): cold runs are compile-dominated at smoke
+shapes and would bury the decode hot path.
 
 Every row splits the blended us_per_call into prefill/decode wall time and
-reports the jitted-dispatch counts (``disp=P+D``) and the prefix-cache hit
-rate, so the trajectory captures where each engine spends its time."""
+reports the jitted-dispatch counts (``disp=P+D``), host sync points
+(``hs``), the decode horizon (``K``), and the prefix-cache hit rate, so the
+trajectory captures where each engine spends its time. Rows also carry
+structured ``decode_ms_per_tok`` / ``decode_dispatches`` / ``host_syncs``
+fields that ``benchmarks.run --check`` gates against the recorded
+baseline."""
 from __future__ import annotations
 
 import jax
@@ -16,6 +23,15 @@ from repro.configs import get_config
 from repro.serve import ServeEngine, ServeRequest, sharded_engine
 
 ARCHS = ("qwen2-0.5b", "mamba2-780m")
+
+
+def _run_warm(engine, mk_requests):
+    """Steady-state measurement: run once to compile every (width, horizon)
+    program, then measure a second run on fresh request copies. Cold runs
+    are compile-dominated at smoke shapes, which buries the decode hot path
+    the trajectory (and the --check gate) cares about."""
+    engine.run(mk_requests())
+    return engine.run(mk_requests())
 
 
 def _requests(cfg, n, max_new, seed=0, stagger=False):
@@ -36,6 +52,13 @@ def _requests(cfg, n, max_new, seed=0, stagger=False):
 def _row(name, stats):
     us = 1e6 * stats.wall_s / max(stats.new_tokens, 1)
     return {"name": name, "us_per_call": us,
+            # structured fields for the `benchmarks.run --check` regression
+            # gate: decode wall per generated token (machine-speed bound,
+            # generous tolerance) and dispatch/sync counts (deterministic).
+            "decode_ms_per_tok": 1e3 * stats.decode_s
+                                 / max(stats.new_tokens, 1),
+            "decode_dispatches": stats.decode_dispatches,
+            "host_syncs": stats.host_syncs,
             "derived": (f"tok_s={stats.tokens_per_s:.1f} "
                         f"util={stats.slot_utilization:.2f} "
                         f"lat_steps={stats.mean_latency_steps:.1f} "
@@ -43,6 +66,8 @@ def _row(name, stats):
                         f"decode_ms={stats.decode_s * 1e3:.0f} "
                         f"disp={stats.prefill_dispatches}"
                         f"+{stats.decode_dispatches} "
+                        f"hs={stats.host_syncs} "
+                        f"K={stats.decode_horizon} "
                         f"hit={stats.prefix_hit_rate:.2f}")}
 
 
@@ -52,25 +77,48 @@ def run():
     for arch in ARCHS:
         cfg = get_config(arch, smoke=True)
 
+        def static_reqs():
+            reqs = _requests(cfg, n, max_new)
+            for r in reqs:
+                r.arrival_time = 0.0
+            return reqs
+
         static = ServeEngine(cfg, max_len=64)
-        reqs = _requests(cfg, n, max_new)
-        for r in reqs:
-            r.arrival_time = 0.0
-        _, st = static.run(reqs)
+        _, st = _run_warm(static, static_reqs)
         rows.append(_row(f"serve/static/{arch}", st))
 
         cont = ServeEngine(cfg, max_len=64, n_slots=max(2, n // 2),
                            policy="fcfs")
-        _, st = cont.run(_requests(cfg, n, max_new))
+        _, st = _run_warm(cont, lambda: _requests(cfg, n, max_new))
         rows.append(_row(f"serve/continuous/{arch}", st))
 
         shard = sharded_engine(cfg, n_slots=max(2, n // 2), max_len=64)
-        _, st = shard.run(_requests(cfg, n, max_new))
+        _, st = _run_warm(shard, lambda: _requests(cfg, n, max_new))
         row = _row(f"serve/sharded-continuous/{arch}", st)
         row["derived"] += f" ndev={jax.device_count()}"
         rows.append(row)
     rows.extend(_paged_admission_rows(n, max_new))
     rows.extend(_prefix_cache_rows(n, max_new))
+    rows.extend(_horizon_rows(n, max_new))
+    return rows
+
+
+def _horizon_rows(n, max_new):
+    """Decode-horizon ablation: the same continuous workload at K=1 (the
+    classic per-token loop) vs K=8 (device-resident multi-step decode) on
+    both cache backends — decode dispatches and host syncs should drop
+    ~K-fold at identical outputs."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    rows = []
+    for label, kw in (("contig", dict()),
+                      ("paged", dict(cache="paged", block_size=8))):
+        for k in (1, 8):
+            eng = ServeEngine(cfg, max_len=64, n_slots=max(2, n // 2),
+                              decode_horizon=k, **kw)
+            _, st = _run_warm(
+                eng, lambda: _requests(cfg, n, max_new, stagger=True))
+            rows.append(_row(f"serve/horizon-K{k}-{label}/{arch}", st))
     return rows
 
 
@@ -86,12 +134,18 @@ def _paged_admission_rows(n, max_new):
     cfg = get_config(arch, smoke=True)
     max_len, block = 64, 8
     budget = (n // 2) * max_len                  # cache positions
-    reqs = _requests(cfg, n, max_new, stagger=True)   # fresh copies below
-                                                 # arrive at step 0
+    # double the generation budgets: completions must span multiple K=8
+    # horizons (the bucket only shrinks at a horizon boundary), so the
+    # rows_saved stat keeps exercising live-slot compaction.
+    reqs = _requests(cfg, n, 2 * max_new, stagger=True)   # fresh copies
+                                                 # below arrive at step 0
+    def copies():
+        return [ServeRequest(r.prompt.copy(),
+                             max_new_tokens=r.max_new_tokens)
+                for r in reqs]
+
     cont = ServeEngine(cfg, max_len=max_len, n_slots=budget // max_len)
-    _, st = cont.run([ServeRequest(r.prompt.copy(),
-                                   max_new_tokens=r.max_new_tokens)
-                      for r in reqs])
+    _, st = _run_warm(cont, copies)
     rows = []
     row = _row(f"serve/admission-contiguous/{arch}", st)
     row["derived"] += (f" max_active={st.max_active} steps={st.steps} "
@@ -101,9 +155,7 @@ def _paged_admission_rows(n, max_new):
     paged = ServeEngine(cfg, max_len=max_len, n_slots=n, cache="paged",
                         block_size=block, n_blocks=budget // block,
                         watermark=0.0)
-    _, st = paged.run([ServeRequest(r.prompt.copy(),
-                                    max_new_tokens=r.max_new_tokens)
-                       for r in reqs])
+    _, st = _run_warm(paged, copies)
     row = _row(f"serve/admission-paged/{arch}", st)
     row["derived"] += (f" max_active={st.max_active} steps={st.steps} "
                        f"rows_saved={st.decode_rows_saved:.2f} "
@@ -137,6 +189,6 @@ def _prefix_cache_rows(n, max_new):
                           ("prefix-paged-nocache", False)):
         eng = ServeEngine(cfg, max_len=max_len, n_slots=n, cache="paged",
                           block_size=block, prefix_cache=cached)
-        _, st = eng.run(reqs())
+        _, st = _run_warm(eng, reqs)
         rows.append(_row(f"serve/{label}/{arch}", st))
     return rows

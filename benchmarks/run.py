@@ -5,6 +5,16 @@ the full records to experiments/bench_results.json. Default is a fast
 configuration (minutes); set BENCH_FULL=1 for paper-scale runs.
 
     PYTHONPATH=src python -m benchmarks.run [module-substring ...]
+
+``--check`` turns the run into a CI regression gate instead of a recorder:
+fresh rows are compared against the records already in
+experiments/bench_results.json — ``decode_ms_per_tok`` within
+``--tolerance`` (default 2.5x, generous because CI machines differ from the
+recording machine) and the machine-independent ``decode_dispatches`` /
+``host_syncs`` counts within 1.5x — and the baseline file is left
+untouched. Exit status 1 on any regression.
+
+    PYTHONPATH=src python -m benchmarks.run bench_serve --check
 """
 from __future__ import annotations
 
@@ -38,8 +48,69 @@ MODULES = [
 ]
 
 
+#: structured row fields the --check gate compares: {field: (tolerance
+#: factor | None = use --tolerance, absolute slack added to the bound)}.
+#: Wall-clock fields get a multiplicative band for machine speed plus an
+#: absolute ms floor so micro-rows are not gated on scheduler noise;
+#: dispatch/sync counts are deterministic for a given configuration, so a
+#: breached bound there means a real dispatch-count regression.
+CHECK_FIELDS = {"decode_ms_per_tok": (None, 2.0),
+                "decode_dispatches": (1.5, 0.0),
+                "host_syncs": (1.5, 0.0)}
+
+
+def _parse_args(argv):
+    """(filters, check, tolerance): positional substrings filter modules;
+    --check flips gate mode; --tolerance X (or --tolerance=X) scales the
+    wall-clock bound."""
+    filters, check, tolerance = [], False, 2.5
+    i = 0
+    try:
+        while i < len(argv):
+            a = argv[i]
+            if a == "--check":
+                check = True
+            elif a == "--tolerance":
+                tolerance = float(argv[i + 1])
+                i += 1
+            elif a.startswith("--tolerance="):
+                tolerance = float(a.split("=", 1)[1])
+            elif not a.startswith("-"):
+                filters.append(a)
+            i += 1
+    except (IndexError, ValueError):
+        raise SystemExit("usage: benchmarks.run [module-substring ...] "
+                         "[--check] [--tolerance X]")
+    return filters, check, tolerance
+
+
+def check_regressions(records, baseline, tolerance: float):
+    """Compare fresh rows against the recorded baseline; returns a list of
+    human-readable regression strings (empty = gate passes). Rows or fields
+    absent from either side are skipped — the gate only tightens as the
+    baseline file accumulates rows."""
+    base = {r.get("name"): r for r in baseline}
+    failures = []
+    for rec in records:
+        ref = base.get(rec.get("name"))
+        if ref is None:
+            continue
+        for field, (tol, slack) in CHECK_FIELDS.items():
+            tol = tolerance if tol is None else tol
+            got, want = rec.get(field), ref.get(field)
+            if got is None or want is None or not want:
+                continue
+            bound = float(want) * tol + slack
+            if float(got) > bound:
+                failures.append(
+                    f"{rec['name']}: {field} {float(got):.2f} > "
+                    f"{float(want):.2f} * {tol:g} + {slack:g} "
+                    f"(recorded baseline)")
+    return failures
+
+
 def main() -> None:
-    filters = [a for a in sys.argv[1:] if not a.startswith("-")]
+    filters, check, tolerance = _parse_args(sys.argv[1:])
     records = []
     print("name,us_per_call,derived")
     t_start = time.time()
@@ -59,14 +130,36 @@ def main() -> None:
         sys.stdout.flush()
 
     os.makedirs("experiments", exist_ok=True)
+    try:
+        with open("experiments/bench_results.json") as f:
+            prior = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        prior = []
+
+    if check:
+        # gate mode: compare against the recorded baseline, leave it as is.
+        # A missing/corrupt baseline (or one sharing no rows with this run)
+        # must FAIL — a gate that silently compares zero rows is no gate.
+        names = {r.get("name") for r in prior}
+        comparable = [r for r in records if r.get("name") in names]
+        if not comparable:
+            print("# REGRESSION experiments/bench_results.json has no rows "
+                  "matching this run — baseline missing or corrupt")
+            raise SystemExit(1)
+        failures = check_regressions(records, prior, tolerance)
+        print(f"# total wall: {time.time() - t_start:.0f}s; "
+              f"--check: {len(comparable)} rows vs recorded baseline "
+              f"(tolerance {tolerance:g}x)")
+        if failures:
+            for msg in failures:
+                print(f"# REGRESSION {msg}")
+            raise SystemExit(1)
+        print("# bench regression gate: PASS")
+        return
+
     # A filtered run updates its rows in place instead of clobbering the
     # other modules' records, so the trajectory file stays complete.
-    if filters and os.path.exists("experiments/bench_results.json"):
-        try:
-            with open("experiments/bench_results.json") as f:
-                prior = json.load(f)
-        except (OSError, json.JSONDecodeError):
-            prior = []
+    if filters:
         fresh = {r["name"] for r in records}
         records = [r for r in prior if r.get("name") not in fresh] + records
     with open("experiments/bench_results.json", "w") as f:

@@ -16,10 +16,17 @@ system-prompt-style workload and ``--min-hit-rate`` asserts the cache
 worked), and decode compacts to the live slots (the summary reports the
 saved rows, prefill/decode dispatch counts and wall split, the prefix-cache
 hit rate, and the pool's occupancy/fragmentation).
+``--decode-horizon K`` (default 8) runs K decode steps per jitted dispatch
+entirely on device — on-device token selection, per-row budget/EOS stop
+masks (``--eos-token``), device-resident decode state — so the summary's
+``host_syncs``/``decode_dispatches`` drop ~K-fold against the per-token
+loop (``--decode-horizon 1``) while outputs stay token-identical.
 ``--mesh host`` executes the jitted decode step TP/DP-sharded over the host
 mesh (forcing an 8-device host platform when run from the CLI, like
-launch/dryrun.py). ``--arrival-rate R`` switches to open-loop arrivals:
-request i becomes admissible at decode step i/R; 0 means all arrive at once.
+launch/dryrun.py); decode compacts to width buckets rounded to the mesh
+'data' axis on both cache backends. ``--arrival-rate R`` switches to
+open-loop arrivals: request i becomes admissible at decode step i/R; 0
+means all arrive at once.
 ``--temperature``/``--top-k`` sample on per-slot RNG lanes
 (``jax.random.fold_in`` on slot id + decode step); greedy is the default.
 ``--verify`` re-runs the request set on a single-device static engine with a
@@ -105,6 +112,11 @@ def main() -> None:
                     help="max prompt length (lengths are mixed in [len/2, len])")
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--decode-horizon", type=int, default=8,
+                    help="decode steps per jitted dispatch (device-resident "
+                         "multi-step loop; 1 = the classic per-token loop)")
+    ap.add_argument("--eos-token", type=int, default=None,
+                    help="stop a request early when it emits this token id")
     ap.add_argument("--arrival-rate", type=float, default=0.0,
                     help="open-loop arrivals per decode step (0 = all at once)")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -125,7 +137,9 @@ def main() -> None:
                      n_blocks=n_blocks, watermark=args.watermark,
                      prefill_lanes=args.prefill_lanes,
                      prefix_cache=args.prefix_cache,
-                     temperature=args.temperature, top_k=args.top_k)
+                     temperature=args.temperature, top_k=args.top_k,
+                     decode_horizon=args.decode_horizon,
+                     eos_token=args.eos_token)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
@@ -152,7 +166,11 @@ def main() -> None:
     }
 
     if args.verify:
-        ref_engine = ServeEngine(cfg, max_len=args.max_len)
+        # the reference is the classic loop: single-device static engine,
+        # contiguous cache, decode_horizon=1 — so --verify cross-checks the
+        # multi-step horizon against per-token decoding too.
+        ref_engine = ServeEngine(cfg, max_len=args.max_len, decode_horizon=1,
+                                 eos_token=args.eos_token)
         ref = [ServeRequest(r.prompt.copy(), max_new_tokens=r.max_new_tokens)
                for r in out]
         ref, _ = ref_engine.run(ref)

@@ -77,8 +77,14 @@ def build_model(cfg: ArchConfig) -> Model:
     def init_cache(batch, max_len, dtype=None):
         return mod.init_cache(cfg, batch, max_len, dtype)
 
-    def decode_step(params, cache, tokens, pos):
-        return mod.decode_step(cfg, params, cache, tokens, pos)
+    def decode_step(params, cache, tokens, pos, write_valid=None):
+        # write_valid (frozen-row KV-write mask of a multi-step decode
+        # horizon) exists for the attention families; recurrent state has no
+        # positional write to mask, so the plain signature is kept there.
+        if write_valid is None:
+            return mod.decode_step(cfg, params, cache, tokens, pos)
+        return mod.decode_step(cfg, params, cache, tokens, pos,
+                               write_valid=write_valid)
 
     paged = {}
     if hasattr(mod, "init_paged_cache"):
@@ -87,9 +93,9 @@ def build_model(cfg: ArchConfig) -> Model:
                 lambda n_blocks, block_size, dtype=None:
                 mod.init_paged_cache(cfg, n_blocks, block_size, dtype)),
             paged_decode_step=(
-                lambda params, cache, tokens, pos, tables:
+                lambda params, cache, tokens, pos, tables, write_valid=None:
                 mod.paged_decode_step(cfg, params, cache, tokens, pos,
-                                      tables)),
+                                      tables, write_valid=write_valid)),
             paged_prefill_chunk=(
                 lambda params, cache, tokens, start, tables, state=None,
                 cap_tokens=0, n_valid=None, cap_rows=None:

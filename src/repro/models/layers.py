@@ -386,16 +386,29 @@ def decode_positions(b: int, pos) -> jax.Array:
     return pos[:, None]
 
 
-def update_kv_cache(ck, cv, k, v, cache_pos):
+def update_kv_cache(ck, cv, k, v, cache_pos, valid=None):
     """Write one decode step's k/v [B, 1, H, D] into the cache [B, S, H, D]
     at ``cache_pos`` (scalar, or [B] for per-row positions) and return the
-    updated cache plus the validity mask over cache positions."""
+    updated cache plus the validity mask over cache positions.
+
+    ``valid`` ([B] bool, per-row positions only) drops rows from the write
+    entirely: a frozen row of a multi-step decode horizon (finished budget /
+    EOS) must stop writing KV. Masked rows are redirected to an
+    out-of-bounds position and scattered with ``mode="drop"``, so the cache
+    row is untouched rather than overwritten in place.
+    """
     pos = jnp.asarray(cache_pos)
     k_pos = jnp.arange(ck.shape[1])
     if pos.ndim == 0:
         ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), pos, axis=1)
         cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), pos, axis=1)
         return ck, cv, k_pos, pos
+    if valid is not None:
+        rows = jnp.arange(ck.shape[0])
+        pos_eff = jnp.where(valid, pos, ck.shape[1])      # oob -> dropped
+        ck = ck.at[rows, pos_eff].set(k[:, 0].astype(ck.dtype), mode="drop")
+        cv = cv.at[rows, pos_eff].set(v[:, 0].astype(cv.dtype), mode="drop")
+        return ck, cv, k_pos[None, :], pos[:, None]
     upd = lambda c, u, p_: jax.lax.dynamic_update_slice_in_dim(c, u, p_, axis=0)
     ck = jax.vmap(upd)(ck, k.astype(ck.dtype), pos)
     cv = jax.vmap(upd)(cv, v.astype(cv.dtype), pos)
@@ -413,6 +426,9 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
         k/v is written at ``cache_pos`` (scalar, or [B] per-row positions for
         continuous batching) and attention spans the cache.
       * cross attention: ``cross_kv=(k, v)`` precomputed from encoder output.
+    ``kv_valid`` masks K/V writes: [B, C] chunk validity for paged prefill
+    lanes, or a [B, 1] per-row freeze mask for decode (a finished row of a
+    multi-step horizon stops writing KV on both cache backends).
     Returns (out, new_kv_cache_or_None).
     """
     b, s, _ = x.shape
@@ -442,7 +458,9 @@ def attention(p, cfg, x, positions, *, causal: bool = True,
         if cfg.pos_emb == "rope":
             q = apply_rope(q, positions, cfg.rope_theta)
             k = apply_rope(k, positions, cfg.rope_theta)
-        ck, cv, k_pos, cpos = update_kv_cache(ck, cv, k, v, cache_pos)
+        ck, cv, k_pos, cpos = update_kv_cache(
+            ck, cv, k, v, cache_pos,
+            valid=kv_valid[:, 0] if kv_valid is not None else None)
         new_cache = (ck, cv)
         k, v = ck, cv
         valid = k_pos <= cpos

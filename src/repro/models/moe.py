@@ -157,10 +157,12 @@ def moe_ffn(cfg, p, x, *, counts=None, cap_tokens=None, token_valid=None,
 # ---------------------------------------------------------------------------
 # forward / loss / decode
 # ---------------------------------------------------------------------------
-def _layer(cfg, p, x, positions, kv_cache=None, cache_pos=None):
+def _layer(cfg, p, x, positions, kv_cache=None, cache_pos=None,
+           kv_valid=None):
     h = L.rmsnorm(x, p["norm1"], cfg.norm_eps)
     attn_out, new_cache = L.attention(p["attn"], cfg, h, positions,
-                                      kv_cache=kv_cache, cache_pos=cache_pos)
+                                      kv_cache=kv_cache, cache_pos=cache_pos,
+                                      kv_valid=kv_valid)
     x = x + attn_out
     h = L.rmsnorm(x, p["norm2"], cfg.norm_eps)
     ffn_out, aux = moe_ffn(cfg, p, h)
@@ -258,16 +260,19 @@ def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
     return logits, {"k": new_k, "v": new_v}, new_counts
 
 
-def paged_decode_step(cfg, params, cache, tokens, pos, tables):
+def paged_decode_step(cfg, params, cache, tokens, pos, tables,
+                      write_valid=None):
     """One paged decode step (see transformer.paged_decode_step)."""
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
     positions = L.decode_positions(b, pos)
+    kv_valid = None if write_valid is None else write_valid[:, None]
 
     def body(x, scanned):
         p, ck, cv = scanned
         x, new_kv, _aux = _layer(cfg, p, x, positions,
-                                 kv_cache=L.PagedKV(ck, cv, tables))
+                                 kv_cache=L.PagedKV(ck, cv, tables),
+                                 kv_valid=kv_valid)
         return x, new_kv
 
     x, (new_k, new_v) = L.scan_layers(
@@ -277,15 +282,16 @@ def paged_decode_step(cfg, params, cache, tokens, pos, tables):
     return logits, {"k": new_k, "v": new_v}
 
 
-def decode_step(cfg, params, cache, tokens, pos):
+def decode_step(cfg, params, cache, tokens, pos, write_valid=None):
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
     positions = L.decode_positions(b, pos)
+    kv_valid = None if write_valid is None else write_valid[:, None]
 
     def body(x, scanned):
         p, ck, cv = scanned
         x, new_kv, _aux = _layer(cfg, p, x, positions, kv_cache=(ck, cv),
-                                 cache_pos=pos)
+                                 cache_pos=pos, kv_valid=kv_valid)
         return x, new_kv
 
     x, (new_k, new_v) = L.scan_layers(cfg, body, x, (params["layers"], cache["k"], cache["v"]))

@@ -88,7 +88,9 @@ def _attention_dyn_window(cfg, p, x, positions, window, kv_cache, cache_pos,
         return out.reshape(b, s, -1) @ p["wo"], new_cache
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck, cv, k_pos, cpos = L.update_kv_cache(ck, cv, k, v, cache_pos)
+        ck, cv, k_pos, cpos = L.update_kv_cache(
+            ck, cv, k, v, cache_pos,
+            valid=kv_valid[:, 0] if kv_valid is not None else None)
         new_cache = (ck, cv)
         k, v = ck, cv
         mask = k_pos <= cpos
@@ -357,19 +359,24 @@ def paged_prefill_chunk(cfg, params, cache, tokens, start, tables,
     return logits, {"k": new_k, "v": new_v}, None
 
 
-def paged_decode_step(cfg, params, cache, tokens, pos, tables):
+def paged_decode_step(cfg, params, cache, tokens, pos, tables,
+                      write_valid=None):
     """One paged decode step. tokens: [B, 1]; pos: int32 [B] per-row
     positions; tables: [B, MB] block tables (padding rows are all -1 and
-    decode inert garbage that is never read). Returns (logits, new_cache)."""
+    decode inert garbage that is never read); write_valid: [B] bool or None
+    — False rows compute but write no KV (frozen rows of a multi-step
+    decode horizon). Returns (logits, new_cache)."""
     x = L.embed(params["emb"], cfg, tokens)
     b = x.shape[0]
     positions = L.decode_positions(b, pos)
     windows = layer_windows(cfg)
+    kv_valid = None if write_valid is None else write_valid[:, None]
 
     def body(x, scanned):
         p, w, ck, cv = scanned
         x, new_kv = _layer(cfg, p, x, positions, w,
-                           kv_cache=L.PagedKV(ck, cv, tables))
+                           kv_cache=L.PagedKV(ck, cv, tables),
+                           kv_valid=kv_valid)
         return x, new_kv
 
     x, (new_k, new_v) = L.scan_layers(
@@ -379,9 +386,11 @@ def paged_decode_step(cfg, params, cache, tokens, pos, tables):
     return logits, {"k": new_k, "v": new_v}
 
 
-def decode_step(cfg, params, cache, tokens, pos):
+def decode_step(cfg, params, cache, tokens, pos, write_valid=None):
     """One decode step. tokens: [B, 1]; pos: scalar int32 (all rows at the
-    same position) or int32 [B] (per-row positions, continuous batching).
+    same position) or int32 [B] (per-row positions, continuous batching);
+    write_valid: [B] bool or None — False rows compute but write no KV
+    (frozen rows of a multi-step decode horizon; needs vector pos).
 
     Returns (logits [B, 1, V], new_cache).
     """
@@ -389,11 +398,12 @@ def decode_step(cfg, params, cache, tokens, pos):
     b = x.shape[0]
     positions = L.decode_positions(b, pos)
     windows = layer_windows(cfg)
+    kv_valid = None if write_valid is None else write_valid[:, None]
 
     def body(x, scanned):
         p, w, ck, cv = scanned
         x, new_kv = _layer(cfg, p, x, positions, w, kv_cache=(ck, cv),
-                           cache_pos=pos)
+                           cache_pos=pos, kv_valid=kv_valid)
         return x, new_kv
 
     x, (new_k, new_v) = L.scan_layers(

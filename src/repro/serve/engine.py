@@ -36,18 +36,37 @@ routing equals each request's solo one-pass routing. With the prefix cache
 on, a lane starts at its first non-cached block and skips the compute for
 shared prompt blocks entirely.
 
-Decode: one jitted step over the live slots with a per-row ``pos`` vector.
-The paged backend *compacts* the decode batch to the active slots (padded
-to a power-of-two bucket) — the cache is addressed through block tables, so
-compaction is free. The contiguous backend reuses the same live-slot
-compaction via a jitted gather-decode-scatter over the pool's batch axes
-(single-device; the sharded pool keeps full-width decode). The saved work
-is reported as ``decode_rows_saved``.
+Decode (the hot path): one jitted *horizon* dispatch runs up to
+``decode_horizon`` steps entirely on device — ``lax.scan`` over the
+single-step decode with on-device token selection (greedy argmax, or the
+per-slot RNG lanes), token feedback, per-row ``pos`` advance, and per-row
+budget/EOS stop masks (a finished row freezes: its token and position stop
+advancing and its KV writes are masked) — returning only the ``[W, K]``
+int32 token block. The scheduler intervenes at horizon boundaries instead
+of every token, so host<->device traffic per generated token drops from a
+full ``[B, vocab]`` logits fetch plus state re-uploads to ``1/K``-th of one
+``[W, K]`` int32 fetch.
+
+Between horizons the decode state is device-resident (``_DecodeState``):
+last tokens, per-row ``pos``, per-row stop positions, and (paged) the block
+tables live on device and receive *delta* scatters only at admission,
+block growth, eviction, and preemption — never a per-step re-upload.
+
+Both backends compact the decode batch to the live slots: the width is the
+smallest power of two covering the active rows, rounded up to a multiple of
+the mesh 'data' axis so the bucket shards evenly (see
+``ServeSharding.bucket_shardings``). The paged bucket addresses the cache
+through gathered block tables (compaction is free); the contiguous bucket
+gathers/scatters the pool rows inside the same jitted horizon — on one
+device or SPMD-sharded over the mesh. The saved work is reported as
+``decode_rows_saved``.
 
 Token selection: greedy by default (the exactness/verify path). With
 ``temperature > 0`` each slot samples on its own RNG lane —
 ``jax.random.fold_in`` on the slot id and the decode step — optionally
-top-k-truncated, so lanes never interact across slots.
+top-k-truncated, so lanes never interact across slots; the fold is
+identical on- and off-horizon, so ``decode_horizon=1`` degenerates to the
+classic one-step loop token for token.
 """
 from __future__ import annotations
 
@@ -62,6 +81,7 @@ from typing import List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
@@ -76,12 +96,28 @@ _ATTN_PREFILL_FAMILIES = ("dense", "vlm", "moe")
 CACHE_BACKENDS = ("contiguous", "paged")
 
 
-def _bucket(n: int, cap: int) -> int:
-    """Smallest power of two >= n (capped): the compacted decode widths, so
-    a bounded number of XLA programs covers every live-slot count."""
+def _pow2(n: int) -> int:
     b = 1
     while b < n:
         b *= 2
+    return b
+
+
+def _pow2_floor(n: int) -> int:
+    b = 1
+    while b * 2 <= n:
+        b *= 2
+    return b
+
+
+def _bucket(n: int, cap: int, multiple: int = 1) -> int:
+    """Compacted decode width: smallest power of two >= n, rounded up to a
+    multiple of the mesh 'data' axis size (so bucketed rows shard evenly),
+    capped at the pool width — a bounded number of XLA programs covers
+    every live-slot count."""
+    b = _pow2(max(n, 1))
+    if multiple > 1:
+        b = -(-b // multiple) * multiple
     return min(b, cap)
 
 
@@ -107,7 +143,14 @@ class ServeStats:
     decode_s: float = 0.0             # wall seconds inside decode dispatch
     prefill_dispatches: int = 0       # jitted prefill calls (paged: one per
                                       # chunk-round across ALL joining lanes)
-    decode_dispatches: int = 0        # jitted decode steps
+    decode_dispatches: int = 0        # jitted decode horizons (each covers
+                                      # up to decode_horizon steps)
+    # -- decode horizon -------------------------------------------------------
+    decode_horizon: int = 1           # configured K: decode steps per
+                                      # jitted dispatch
+    host_syncs: int = 0               # device->host sync points (one [W, K]
+                                      # int32 fetch per horizon + one id
+                                      # fetch per prefill pick round)
     # -- prefix cache ---------------------------------------------------------
     prefix_blocks_total: int = 0      # prompt blocks allocated (paged)
     prefix_blocks_hit: int = 0        # of those, served from the cache
@@ -126,6 +169,82 @@ class _PrefillLane:
     state: Optional[np.ndarray]
 
 
+class _DecodeState:
+    """Device-resident decode-loop state.
+
+    The last token, per-row ``pos``, and per-row freeze position ``stop``
+    (plus the paged block tables) stay on device between horizon
+    dispatches; the host scatters *deltas* at admission, growth, eviction,
+    and preemption only. ``stop`` is the position at which a row freezes
+    (``prompt_len + max_new - 1`` — the budget's last write position + 1);
+    a row is live while ``pos < stop``, so zeroed rows (idle slots, frozen
+    evictees) are inert horizon padding. Sharded engines keep these arrays
+    replicated — a few int32 per slot, delta-updated from the host — and
+    the horizon gathers each bucket with the width's NamedSharding.
+    """
+
+    def __init__(self, n_slots: int, max_blocks: Optional[int] = None,
+                 sharding=None):
+        rep = sharding.replicated() if sharding is not None else None
+        put = (lambda x: jax.device_put(x, rep)) if rep is not None \
+            else (lambda x: x)
+        self.tok = put(jnp.zeros((n_slots, 1), jnp.int32))
+        self.pos = put(jnp.zeros((n_slots,), jnp.int32))
+        self.stop = put(jnp.zeros((n_slots,), jnp.int32))
+        self.tables = (put(jnp.full((n_slots, max_blocks), -1, jnp.int32))
+                       if max_blocks else None)
+
+    def set_rows(self, slots, toks, pos, stop) -> None:
+        """Install freshly-prefilled rows (paged table rows arrive via
+        ``set_tables`` from the pool's dirty-slot drain — admission marks
+        its slots dirty, so the rows upload exactly once)."""
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        self.tok = self.tok.at[idx].set(
+            jnp.asarray(np.asarray(toks, np.int32)[:, None]))
+        self.pos = self.pos.at[idx].set(
+            jnp.asarray(np.asarray(pos, np.int32)))
+        self.stop = self.stop.at[idx].set(
+            jnp.asarray(np.asarray(stop, np.int32)))
+
+    def set_tables(self, slots, rows) -> None:
+        idx = jnp.asarray(np.asarray(slots, np.int32))
+        self.tables = self.tables.at[idx].set(
+            jnp.asarray(np.asarray(rows, np.int32)))
+
+    def freeze(self, slots) -> None:
+        """stop=0 for vacated slots: frozen rows never advance, never write
+        KV, and (paged) never scatter through a stale block table."""
+        slots = sorted(slots)
+        if slots:
+            idx = jnp.asarray(np.asarray(slots, np.int32))
+            self.stop = self.stop.at[idx].set(0)
+
+
+def _scan_horizon(step_fn, pick, eos, cache, t, p, s, idx, step0, h):
+    """The shared horizon scan: up to ``h`` decode steps on device over a
+    gathered bucket — one ``step_fn(cache, tokens, pos, active)`` per step
+    (contiguous or paged, the only difference between the backends' horizon
+    programs), on-device selection, token feedback, per-row pos advance,
+    and the budget/EOS stop masks. A row is live while ``p < s``; frozen
+    rows keep (token, pos) and emit the -1 sentinel. Returns
+    (cache, t, p, s, token block [W, h])."""
+    def body(carry, k):
+        cache, t, p, s = carry
+        active = p < s
+        logits, cache = step_fn(cache, t, p, active)
+        nxt = pick(logits[:, -1], idx, step0 + k)
+        emitted = jnp.where(active, nxt, -1)
+        t = jnp.where(active[:, None], nxt[:, None], t)
+        p = p + active.astype(jnp.int32)
+        if eos is not None:
+            s = jnp.where(active & (nxt == eos), p, s)
+        return (cache, t, p, s), emitted
+
+    (cache, t, p, s), toks = jax.lax.scan(
+        body, (cache, t, p, s), jnp.arange(h, dtype=jnp.int32))
+    return cache, t, p, s, toks.T
+
+
 class ServeEngine:
     """Serving engine for any architecture family.
 
@@ -141,6 +260,12 @@ class ServeEngine:
     prefixes hit the content-addressed block cache (``prefix_cache``), and
     decode compacts to the live slots. Outputs stay token-identical to
     contiguous.
+
+    ``decode_horizon=K`` runs up to K decode steps per jitted dispatch, all
+    on device (``decode_horizon=1`` is the classic per-token loop; any K is
+    token-identical under greedy decoding). ``eos_token`` stops a row early
+    when it emits that token (the EOS half of the per-row stop mask; budget
+    stops always apply).
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
@@ -150,7 +275,8 @@ class ServeEngine:
                  n_blocks: Optional[int] = None, watermark: float = 0.05,
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, prefill_lanes: int = 4,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, decode_horizon: int = 8,
+                 eos_token: Optional[int] = None):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -174,45 +300,23 @@ class ServeEngine:
         self.prefix_cache = bool(prefix_cache)
         self.temperature = float(temperature)
         self.top_k = int(top_k)
+        self.decode_horizon = max(int(decode_horizon), 1)
+        self.eos_token = None if eos_token is None else int(eos_token)
         self._sample_key = jax.random.key(sample_seed)
-        self._sampler = None
-        self._decode_compact = None
         rng = rng if rng is not None else jax.random.key(0)
         with self._rules():
             self.params = (params if params is not None
                            else self.model.init(rng))
         if sharding is not None:
             self.params = jax.device_put(self.params, sharding.param_sharding)
+        self._pick_device = self._pick_fn()
+        self._pick = jax.jit(self._pick_device)
         if cache == "paged":
-            mod, mcfg = self.model.module, self.cfg
-
-            def paged_step(params, buffers, tokens, pos, tables):
-                return mod.paged_decode_step(mcfg, params, buffers, tokens,
-                                             pos, tables)
-            if sharding is not None:
-                # tokens/pos/tables ride replicated: the compacted decode
-                # width varies per step, and they are tiny next to the pool.
-                self._decode = jax.jit(
-                    paged_step,
-                    in_shardings=(sharding.param_sharding,
-                                  sharding.cache_sharding, None, None, None),
-                    out_shardings=(None, sharding.cache_sharding))
-            else:
-                self._decode = jax.jit(paged_step)
             self._prefill = self._paged_prefill_fn()
+            self._horizon = self._paged_horizon_fn()
         else:
-            if sharding is not None:
-                self._decode = jax.jit(
-                    self.model.decode_step,
-                    in_shardings=(sharding.param_sharding,
-                                  sharding.cache_sharding,
-                                  sharding.token_sharding,
-                                  sharding.pos_sharding),
-                    out_shardings=(None, sharding.cache_sharding))
-            else:
-                self._decode = jax.jit(self.model.decode_step)
-                self._decode_compact = self._decode_compact_fn()
             self._prefill = jax.jit(self._prefill_fn())
+            self._horizon = self._contiguous_horizon_fn()
 
     def _rules(self):
         """Logical-axis rules context (no-op off-mesh / unsharded)."""
@@ -267,56 +371,156 @@ class ServeEngine:
                                            cap_rows=cap_rows)
         return chunk_fn
 
-    def _decode_compact_fn(self):
-        """Jitted gather-decode-scatter: decode only the pool rows in
-        ``idx`` (live slots + distinct idle pad rows), writing the updated
-        rows back in place — the contiguous mirror of the paged backend's
-        free compaction. Rows decode independently, so the gathered rows'
-        outputs equal a full-pool decode's."""
-        model, max_len = self.model, self.max_len
-        probe_a = jax.eval_shape(lambda: model.init_cache(3, max_len))
-        probe_b = jax.eval_shape(lambda: model.init_cache(5, max_len))
-        from repro.serve.cache import _batch_axis
-        axes = jax.tree_util.tree_map(_batch_axis, probe_a, probe_b)
-
-        def fn(params, buffers, toks, pos, idx):
-            sub = jax.tree_util.tree_map(
-                lambda b, ax: jnp.take(b, idx, axis=ax), buffers, axes)
-            logits, new_sub = model.decode_step(params, sub, toks, pos)
-            out = jax.tree_util.tree_map(
-                lambda b, nb, ax: b.at[(slice(None),) * ax + (idx,)].set(nb),
-                buffers, new_sub, axes)
-            return logits, out
-        return jax.jit(fn)
-
     # -- token selection (greedy / per-slot RNG lanes) -------------------------
-    def _make_sampler(self):
+    def _pick_fn(self):
+        """On-device token selection: logits [N, V] -> token ids [N] int32.
+
+        Greedy argmax unless ``temperature > 0``; sampling folds (slot id,
+        decode step) into per-slot RNG lanes. Traced both inside the decode
+        horizon's scan body and as the stand-alone jitted ``self._pick`` the
+        prefill sites call — only the [N] int32 ids ever cross to the host,
+        never the [N, vocab] logits."""
         temp, tk, base = self.temperature, self.top_k, self._sample_key
 
-        @jax.jit
-        def sample(logits, slots, step):
+        def pick(logits, slots, step):
+            if temp <= 0:
+                return jnp.argmax(logits, axis=-1).astype(jnp.int32)
             key = jax.random.fold_in(base, step)
             keys = jax.vmap(lambda s: jax.random.fold_in(key, s))(slots)
             scaled = logits.astype(jnp.float32) / temp
             if tk:
                 kth = jax.lax.top_k(scaled, tk)[0][..., -1:]
                 scaled = jnp.where(scaled < kth, -jnp.inf, scaled)
-            return jax.vmap(jax.random.categorical)(keys, scaled)
-        return sample
+            return jax.vmap(jax.random.categorical)(keys,
+                                                    scaled).astype(jnp.int32)
+        return pick
 
-    def _select_tokens(self, logits, slots, step) -> np.ndarray:
-        """logits [N, V] -> next tokens [N]. Greedy unless temperature > 0;
-        sampling folds (slot id, decode step) into per-slot RNG lanes.
-        Prefill call sites pass ``~step`` (the complement lane) so a slot's
+    def _select_tokens(self, logits, slots, step, c=None) -> np.ndarray:
+        """logits [N, V] -> next tokens [N] (host). Selection runs on device
+        (jitted ``_pick``) and only the int32 ids transfer. Prefill call
+        sites pass ``~step`` (the complement lane) so a slot's
         prefill-sampled token and its first decode token — which happen at
         the same scheduler step — never draw on the same key."""
-        if self.temperature <= 0:
-            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
-        if self._sampler is None:
-            self._sampler = self._make_sampler()
-        return np.asarray(
-            self._sampler(logits, jnp.asarray(slots, jnp.int32),
-                          jnp.int32(step)), np.int32)
+        ids = self._pick(logits, jnp.asarray(np.asarray(slots, np.int32)),
+                         jnp.int32(step))
+        if c is not None:
+            c["host_syncs"] += 1
+        return np.asarray(ids, np.int32)
+
+    # -- decode horizons -------------------------------------------------------
+    def _contiguous_horizon_fn(self):
+        """Jitted multi-step decode horizon over the pooled cache: gather
+        the bucket's rows (cache + state) once, ``lax.scan`` up to ``h``
+        decode steps with on-device selection / token feedback / stop
+        masks, scatter the rows back. Rows decode independently, so the
+        gathered rows' outputs equal a full-pool decode's — the
+        gather-decode-scatter compaction, now inside the horizon and also
+        SPMD-sharded when a plan is installed."""
+        model, max_len = self.model, self.max_len
+        from repro.serve.cache import _batch_axis
+        probe_a = jax.eval_shape(lambda: model.init_cache(3, max_len))
+        probe_b = jax.eval_shape(lambda: model.init_cache(5, max_len))
+        axes = jax.tree_util.tree_map(_batch_axis, probe_a, probe_b)
+        pick = self._pick_device
+        masked = self.cfg.family in _ATTN_PREFILL_FAMILIES
+        eos = self.eos_token
+        plan = self.sharding
+
+        def horizon(params, buffers, tok, pos, stop, idx, step0, h, full):
+            if full:
+                # identity bucket: every slot decodes (idle rows are frozen
+                # and inert), so skip the gather/scatter copies of the pool
+                # the old full-width decode path never paid.
+                sub, t, p, s = buffers, tok, pos, stop
+            else:
+                sub = jax.tree_util.tree_map(
+                    lambda b, ax: jnp.take(b, idx, axis=ax), buffers, axes)
+                t, p, s = tok[idx], pos[idx], stop[idx]
+            if plan is not None:
+                bsh = plan.bucket_shardings(idx.shape[0])
+                if plan.cache_pspec is not None:
+                    sub = jax.tree_util.tree_map(
+                        lambda x, sp: jax.lax.with_sharding_constraint(
+                            x, NamedSharding(plan.mesh, sp)),
+                        sub, plan.cache_pspec)
+                t = jax.lax.with_sharding_constraint(t, bsh["tokens"])
+                p = jax.lax.with_sharding_constraint(p, bsh["pos"])
+                s = jax.lax.with_sharding_constraint(s, bsh["pos"])
+
+            def step_fn(sub, t, p, active):
+                if masked:        # frozen rows stop writing KV
+                    return model.decode_step(params, sub, t, p,
+                                             write_valid=active)
+                # recurrent state has no positional write to mask: frozen
+                # rows recompute garbage state, discarded at slot reuse.
+                return model.decode_step(params, sub, t, p)
+
+            sub, t, p, s, blk = _scan_horizon(step_fn, pick, eos, sub,
+                                              t, p, s, idx, step0, h)
+            if full:
+                return sub, t, p, s, blk
+            buffers = jax.tree_util.tree_map(
+                lambda b, nb, ax: b.at[(slice(None),) * ax + (idx,)].set(nb),
+                buffers, sub, axes)
+            tok = tok.at[idx].set(t)
+            pos = pos.at[idx].set(p)
+            stop = stop.at[idx].set(s)
+            return buffers, tok, pos, stop, blk
+
+        return self._jit_horizon(horizon)
+
+    def _paged_horizon_fn(self):
+        """Jitted multi-step decode horizon over the block pool: gather the
+        bucket's tokens/pos/stop/tables (compaction through block tables is
+        free), ``lax.scan`` up to ``h`` steps, scatter the state back.
+        Frozen rows mask their KV writes, so a vacated slot's stale table
+        can never scatter into a recycled block."""
+        model = self.model
+        pick = self._pick_device
+        eos = self.eos_token
+        plan = self.sharding
+
+        def horizon(params, buffers, tok, pos, stop, tables, idx, step0, h,
+                    full):
+            if full:
+                t, p, s, tb = tok, pos, stop, tables
+            else:
+                t, p, s, tb = tok[idx], pos[idx], stop[idx], tables[idx]
+            if plan is not None:
+                bsh = plan.bucket_shardings(idx.shape[0])
+                t = jax.lax.with_sharding_constraint(t, bsh["tokens"])
+                p = jax.lax.with_sharding_constraint(p, bsh["pos"])
+                s = jax.lax.with_sharding_constraint(s, bsh["pos"])
+                tb = jax.lax.with_sharding_constraint(tb, bsh["tables"])
+
+            def step_fn(buffers, t, p, active):
+                return model.paged_decode_step(params, buffers, t, p, tb,
+                                               write_valid=active)
+
+            buffers, t, p, s, blk = _scan_horizon(step_fn, pick, eos,
+                                                  buffers, t, p, s, idx,
+                                                  step0, h)
+            if full:
+                return buffers, t, p, s, blk
+            tok = tok.at[idx].set(t)
+            pos = pos.at[idx].set(p)
+            stop = stop.at[idx].set(s)
+            return buffers, tok, pos, stop, blk
+
+        return self._jit_horizon(horizon)
+
+    def _jit_horizon(self, horizon):
+        """jit with ``h`` (scan length) and ``full`` (identity bucket —
+        no gather/scatter) static; sharded plans pin the cache to its
+        NamedSharding and the state arrays to replicated so input
+        shardings stay stable across calls."""
+        plan = self.sharding
+        if plan is not None:
+            rep = plan.replicated()
+            return jax.jit(horizon, static_argnames=("h", "full"),
+                           out_shardings=(plan.cache_sharding,
+                                          rep, rep, rep, rep))
+        return jax.jit(horizon, static_argnames=("h", "full"))
 
     # -- the engine loop ---------------------------------------------------------
     def run(self, requests: List[ServeRequest]
@@ -359,6 +563,8 @@ class ServeEngine:
             decode_s=counters["decode_s"],
             prefill_dispatches=counters["prefill_dispatches"],
             decode_dispatches=counters["decode_dispatches"],
+            decode_horizon=self.decode_horizon,
+            host_syncs=counters["host_syncs"],
             prefix_blocks_total=total,
             prefix_blocks_hit=hit,
             prefix_hit_rate=hit / total if total else 0.0,
@@ -370,7 +576,108 @@ class ServeEngine:
         return dict(steps=0, util_acc=0.0, max_active=0, rows_decoded=0,
                     preemptions=0, block_report=None, prefill_s=0.0,
                     decode_s=0.0, prefill_dispatches=0, decode_dispatches=0,
-                    prefix_hits=0, prefix_total=0)
+                    host_syncs=0, prefix_hits=0, prefix_total=0)
+
+    # -- horizon scheduling helpers (host side) --------------------------------
+    def _evict(self, sched, state: _DecodeState):
+        """Evict finished requests and freeze their device rows, so a
+        vacated slot gathered as horizon padding can never decode as live
+        (or, paged, write KV through a stale block table)."""
+        done_slots = [s for s, r in sched.active.items() if r.done]
+        out = sched.evict_finished()
+        state.freeze(done_slots)
+        return out
+
+    def _could_admit_arrival(self, sched) -> bool:
+        """Whether shortening the horizon for the next arrival could pay
+        off: the pool must actually be able to admit a waiting request —
+        free slots for the contiguous pool, watermark-clearing blocks for
+        the paged pool (``can_admit`` is cache-blind, matching the
+        admission rule; the cap is a heuristic either way)."""
+        pool = sched.pool
+        if hasattr(pool, "can_admit"):
+            return any(pool.can_admit(len(r.prompt)) for r in sched.waiting)
+        return getattr(pool, "n_free", 0) > 0
+
+    def _pick_h(self, sched, act) -> int:
+        """Horizon length for this dispatch: at most ``decode_horizon``,
+        capped to the longest remaining budget (every scanned step then
+        serves at least one live row) and to the next open-loop arrival
+        when the pool could admit it — the scheduler only intervenes at
+        horizon boundaries. The result is quantized DOWN to a power of
+        two: ``h`` is a static jit argument, so free-running values would
+        compile one K-step program per (width, h) pair — quantization
+        bounds the program set to log2(K) entries per width."""
+        rem = max(sched.active[s].max_new_tokens - len(sched.active[s].output)
+                  for s in act)
+        h = max(1, min(self.decode_horizon, rem))
+        nxt = sched.next_arrival()
+        if (nxt is not None and nxt > sched.step
+                and self._could_admit_arrival(sched)):
+            h = max(1, min(h, int(math.ceil(nxt - sched.step))))
+        return _pow2_floor(h)
+
+    def _decode_boundary(self, sched, pool, state, c, n_slots, dmult,
+                         h) -> List[int]:
+        """One horizon dispatch at a scheduler boundary (both backends):
+        bucket the live rows, run the jitted horizon, unpack the [W, h]
+        token block, update the counters and the scheduler clock. Returns
+        the per-row emitted counts in sorted-active order."""
+        act = sorted(sched.active)
+        h = _pow2_floor(min(h, max(sched.active[s].max_new_tokens
+                                   - len(sched.active[s].output)
+                                   for s in act)))
+        bc = _bucket(len(act), n_slots, dmult)
+        full = bc == n_slots
+        if full:
+            idx = np.arange(n_slots, dtype=np.int32)
+            rows = act                       # block rows are slot-indexed
+        else:
+            idle = [s for s in range(n_slots) if s not in sched.active]
+            idx = np.asarray(act + idle[:bc - len(act)], np.int32)
+            rows = list(range(len(act)))     # compacted row order
+        args = (self.params, pool.buffers, state.tok, state.pos, state.stop)
+        if state.tables is not None:
+            args += (state.tables,)
+        t0 = time.perf_counter()
+        pool.buffers, state.tok, state.pos, state.stop, blk = self._horizon(
+            *args, jnp.asarray(idx), jnp.int32(sched.step), h=h, full=full)
+        c["decode_dispatches"] += 1
+        blk = np.asarray(blk)                # the ONE [W, h] int32 fetch
+        c["host_syncs"] += 1
+        c["decode_s"] += time.perf_counter() - t0
+        counts = self._unpack_horizon(sched, act, rows, blk, h, n_slots, c)
+        c["rows_decoded"] += len(idx) * h
+        c["max_active"] = max(c["max_active"], len(act))
+        c["steps"] += h
+        sched.step += h
+        return counts
+
+    def _unpack_horizon(self, sched, act, rows, blk, h, n_slots,
+                        c) -> List[int]:
+        """Distribute a horizon's [W, h] token block: the row of active
+        slot ``act[i]`` is ``rows[i]``; its first min(h, remaining)
+        entries are its tokens (the device freezes finished rows and emits
+        -1), truncated at the engine's EOS token. Returns the per-row
+        emitted counts (in ``act`` order)."""
+        counts = []
+        step0 = sched.step
+        for slot, row in zip(act, rows):
+            r = sched.active[slot]
+            m = min(h, r.max_new_tokens - len(r.output))
+            toks = [int(x) for x in blk[row, :m]]
+            if self.eos_token is not None and self.eos_token in toks:
+                toks = toks[:toks.index(self.eos_token) + 1]
+                r.finished_early = True
+            r.output.extend(toks)
+            counts.append(len(toks))
+            if r.done and r.finished_at is None:
+                # exact finishing step (eviction only happens at the
+                # boundary): last token emitted at step0 + count - 1.
+                r.finished_at = float(step0 + len(toks))
+        for k in range(h):
+            c["util_acc"] += sum(1 for m in counts if m > k) / n_slots
+        return counts
 
     def _run_contiguous(self, reqs, n_slots):
         pool = CachePool(self.model, n_slots, self.max_len)
@@ -382,12 +689,13 @@ class ServeEngine:
             r.job_id = i
             sched.submit(r)
 
-        last = np.zeros((n_slots, 1), np.int32)
-        pos = np.zeros((n_slots,), np.int32)
+        state = _DecodeState(n_slots, sharding=self.sharding)
         c = self._counters()
+        dmult = (self.sharding.axis_size("data")
+                 if self.sharding is not None else 1)
 
         while sched.has_work:
-            sched.evict_finished()
+            self._evict(sched, state)
             sched.admit()
             admitted = sched.drain_prefill()
             t0 = time.perf_counter()
@@ -398,13 +706,18 @@ class ServeEngine:
                 c["prefill_dispatches"] += 1
                 pool.write(r.slot, row)
                 tok = int(self._select_tokens(logits[:, -1], [r.slot],
-                                              ~sched.step)[0])
+                                              ~sched.step, c)[0])
                 r.output.append(tok)
-                last[r.slot, 0] = tok
-                pos[r.slot] = len(r.prompt)
+                if self.eos_token is not None and tok == self.eos_token:
+                    r.finished_early = True
             if admitted:
                 c["prefill_s"] += time.perf_counter() - t0
-            sched.evict_finished()       # satisfied by prefill alone
+                state.set_rows(
+                    [r.slot for r in admitted],
+                    [r.output[-1] for r in admitted],
+                    [len(r.prompt) for r in admitted],
+                    [len(r.prompt) + r.max_new_tokens - 1 for r in admitted])
+            self._evict(sched, state)    # satisfied by prefill alone / EOS
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -413,50 +726,15 @@ class ServeEngine:
                 continue
 
             # pool.write's eager scatter loses the NamedSharding layout;
-            # restore it only on rounds that actually admitted (decode's
-            # out_shardings keeps the cache correctly sharded otherwise).
+            # restore it only on rounds that actually admitted (the
+            # horizon's out_shardings keeps the cache sharded otherwise).
             if self.sharding is not None and admitted:
                 pool.buffers = jax.device_put(
                     pool.buffers, self.sharding.cache_sharding)
 
-            # live-slot compaction (single-device): decode only rows with an
-            # active tenant, padded to a power-of-two bucket with DISTINCT
-            # idle rows — their garbage decodes in place exactly as the
-            # full-width step would have, and scatter-back keeps one writer
-            # per row.
-            act = sorted(sched.active)
-            n_act = len(act)
-            bc = _bucket(n_act, n_slots)
-            t0 = time.perf_counter()
-            if self._decode_compact is not None and bc < n_slots:
-                idle = [s for s in range(n_slots) if s not in sched.active]
-                idx = np.asarray(act + idle[:bc - n_act], np.int32)
-                logits, pool.buffers = self._decode_compact(
-                    self.params, pool.buffers, jnp.asarray(last[idx]),
-                    jnp.asarray(pos[idx]), jnp.asarray(idx))
-                rows = np.arange(n_act)           # compacted row order
-                c["rows_decoded"] += bc
-            else:
-                logits, pool.buffers = self._decode(
-                    self.params, pool.buffers, jnp.asarray(last),
-                    jnp.asarray(pos))
-                rows = np.asarray(act)            # slot-indexed rows
-                c["rows_decoded"] += n_slots
-            c["decode_dispatches"] += 1
-            nxt_tok = self._select_tokens(logits[rows, -1, :],
-                                          np.asarray(act, np.int32),
-                                          sched.step)
-            c["decode_s"] += time.perf_counter() - t0
-            for i, slot in enumerate(act):
-                r = sched.active[slot]
-                r.output.append(int(nxt_tok[i]))
-                last[slot, 0] = nxt_tok[i]
-                pos[slot] += 1
-            c["util_acc"] += n_act / n_slots
-            c["max_active"] = max(c["max_active"], n_act)
-            c["steps"] += 1
-            sched.step += 1
-        sched.evict_finished()
+            h = self._pick_h(sched, sorted(sched.active))
+            self._decode_boundary(sched, pool, state, c, n_slots, dmult, h)
+        self._evict(sched, state)
         return c
 
     # -- paged loop --------------------------------------------------------------
@@ -533,29 +811,50 @@ class ServeEngine:
             if done_idx:
                 slots = [lanes[i].req.slot for i in done_idx]
                 toks = self._select_tokens(
-                    logits[np.asarray(done_idx), -1], slots, ~step)
+                    logits[np.asarray(done_idx), -1], slots, ~step, c)
                 for t, i in zip(toks, done_idx):
                     lanes[i].req.output.append(int(t))
             lanes = live
 
-    def _ensure_growth(self, sched, pool: BlockManager, pos) -> int:
-        """Guarantee a block for every active row's next write position,
-        preempting the most recently admitted request on pool pressure.
-        Returns the number of preemptions."""
-        n = 0
+    def _growth_blocks_needed(self, sched, pool: BlockManager, pos_np,
+                              stop_np, h: int) -> int:
+        """Fresh blocks a horizon of ``h`` steps would allocate across the
+        active rows (each row writes positions [pos, min(pos+h, stop)))."""
+        need = 0
+        for s in sched.active:
+            want = pool.blocks_for(min(int(pos_np[s]) + h, int(stop_np[s])))
+            need += max(0, want - pool.owned_blocks(s))
+        return need
+
+    def _ensure_growth(self, sched, pool: BlockManager, pos_np, stop_np,
+                       h: int):
+        """Guarantee blocks for up to ``h`` decode tokens per active row
+        before a horizon dispatch (the host cannot intervene mid-horizon).
+        Shrinks the horizon toward 1 before resorting to preemption — a
+        pool sized for the classic one-step loop still runs, just at
+        shorter horizons — and preempts the most recently admitted request
+        only while even one step cannot be covered.
+        Returns (h, n_preempted, victim_slots)."""
+        victims = []
         while True:
-            blocked = next((s for s in sorted(sched.active)
-                            if not pool.ensure(s, int(pos[s]) + 1)), None)
+            while h > 1 and (self._growth_blocks_needed(
+                    sched, pool, pos_np, stop_np, h) > pool.free_blocks):
+                h = max(1, h // 2)
+            blocked = next(
+                (s for s in sorted(sched.active)
+                 if not pool.ensure(s, min(int(pos_np[s]) + h,
+                                           int(stop_np[s])))),
+                None)
             if blocked is None:
-                return n
+                return h, len(victims), victims
             if len(sched.active) == 1:
                 raise RuntimeError(
                     "paged KV pool exhausted with a single active request; "
                     "grow n_blocks or lower max_new_tokens")
             victim = max(sched.active.values(),
                          key=lambda r: (r.admitted_at, r.slot))
+            victims.append(victim.slot)
             sched.preempt(victim)
-            n += 1
 
     def _run_paged(self, reqs, n_slots):
         pool = BlockManager(self.model, n_slots, self.max_len,
@@ -571,13 +870,17 @@ class ServeEngine:
             r.job_id = i
             sched.submit(r)
 
-        last = np.zeros((n_slots, 1), np.int32)
-        pos = np.zeros((n_slots,), np.int32)
+        state = _DecodeState(n_slots, max_blocks=pool.max_blocks,
+                             sharding=self.sharding)
+        pos_np = np.zeros((n_slots,), np.int64)
+        stop_np = np.zeros((n_slots,), np.int64)
         c = self._counters()
         peak_report = pool.report()
+        dmult = (self.sharding.axis_size("data")
+                 if self.sharding is not None else 1)
 
         while sched.has_work:
-            sched.evict_finished()
+            self._evict(sched, state)
             sched.admit()
             admitted = sched.drain_prefill()
             if admitted:
@@ -585,13 +888,21 @@ class ServeEngine:
                 self._batched_paged_prefill(pool, admitted, sched.step, c)
                 c["prefill_s"] += time.perf_counter() - t0
                 for r in admitted:
-                    last[r.slot, 0] = r.output[-1]
-                    pos[r.slot] = len(r.prompt)
+                    pos_np[r.slot] = len(r.prompt)
+                    stop_np[r.slot] = len(r.prompt) + r.max_new_tokens - 1
+                    if (self.eos_token is not None
+                            and r.output[-1] == self.eos_token):
+                        r.finished_early = True
+                slots = [r.slot for r in admitted]
+                state.set_rows(slots,
+                               [r.output[-1] for r in admitted],
+                               [int(pos_np[s]) for s in slots],
+                               [int(stop_np[s]) for s in slots])
                 snap = pool.report()     # pool pressure peaks can be
                                          # prefill-only (max_new == 1 runs)
                 if snap["used_blocks"] >= peak_report["used_blocks"]:
                     peak_report = snap
-            sched.evict_finished()       # satisfied by prefill alone
+            self._evict(sched, state)    # satisfied by prefill alone / EOS
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -606,43 +917,28 @@ class ServeEngine:
             if self.sharding is not None and admitted:
                 pool.buffers = jax.device_put(
                     pool.buffers, self.sharding.cache_sharding)
-            c["preemptions"] += self._ensure_growth(sched, pool, pos)
 
-            # live-slot compaction: decode only rows with an active tenant,
-            # padded to a power-of-two bucket (pad rows carry all -1 tables,
-            # write nowhere, and read nothing).
+            h = self._pick_h(sched, sorted(sched.active))
+            h, n_pre, victims = self._ensure_growth(sched, pool, pos_np,
+                                                    stop_np, h)
+            c["preemptions"] += n_pre
+            state.freeze(victims)
+            # delta-sync the device table mirror: only rows dirtied by
+            # admission / growth (freed rows stay stale — they are frozen
+            # and write-masked, so the staleness is unobservable).
+            dirty = [s for s in pool.drain_dirty() if s in sched.active]
+            if dirty:
+                state.set_tables(dirty, pool.tables[np.asarray(dirty)])
+
             act = sorted(sched.active)
-            bc = _bucket(len(act), n_slots)
-            toks = np.zeros((bc, 1), np.int32)
-            toks[:len(act)] = last[act]
-            p = np.zeros((bc,), np.int32)
-            p[:len(act)] = pos[act]
-            tables = np.full((bc, pool.max_blocks), -1, np.int32)
-            tables[:len(act)] = pool.table_rows(act)
-
-            t0 = time.perf_counter()
-            logits, pool.buffers = self._decode(
-                self.params, pool.buffers, jnp.asarray(toks),
-                jnp.asarray(p), jnp.asarray(tables))
-            c["decode_dispatches"] += 1
-            nxt_tok = self._select_tokens(logits[:len(act), -1, :],
-                                          np.asarray(act, np.int32),
-                                          sched.step)
-            c["decode_s"] += time.perf_counter() - t0
-            for i, slot in enumerate(act):
-                r = sched.active[slot]
-                r.output.append(int(nxt_tok[i]))
-                last[slot, 0] = nxt_tok[i]
-                pos[slot] += 1
-            c["util_acc"] += len(act) / n_slots
-            c["max_active"] = max(c["max_active"], len(act))
-            c["rows_decoded"] += bc
-            c["steps"] += 1
-            sched.step += 1
+            counts = self._decode_boundary(sched, pool, state, c, n_slots,
+                                           dmult, h)
+            for slot, m in zip(act, counts):
+                pos_np[slot] += m
             snap = pool.report()
             if snap["used_blocks"] >= peak_report["used_blocks"]:
                 peak_report = snap          # report the pool at peak pressure
-        sched.evict_finished()
+        self._evict(sched, state)
         c["block_report"] = peak_report
         c["prefix_hits"] = pool.prefix_blocks_hit
         c["prefix_total"] = pool.prefix_blocks_total

@@ -112,6 +112,11 @@ class BlockManager:
         #: still prefilling (vs pool exhaustion) — the scheduler admits
         #: unrelated requests past a deferral but stops on exhaustion.
         self.deferred_last_alloc = False
+        #: slots whose table row changed since the last ``drain_dirty`` —
+        #: the engine mirrors the block tables on device between decode
+        #: horizons and only re-uploads the dirty rows (delta updates at
+        #: admission / growth / free instead of per-step re-upload).
+        self._dirty_slots: set = set()
 
     # -- block math ----------------------------------------------------------
     def blocks_for(self, n_tokens: int) -> int:
@@ -258,6 +263,7 @@ class BlockManager:
                             block=int(self.tables[slot, j]), refs=1)
                         chain.append((hashes[j], True))
         self._lengths[slot] = n
+        self._dirty_slots.add(slot)
         if self.prefix_cache:
             self._chains[slot] = chain
             self._cached_tokens[slot] = hits * self.block_size
@@ -305,9 +311,20 @@ class BlockManager:
             if not self._free_blocks and not self._evictable:
                 return False
             self.tables[slot, have] = self._take_block()
+            self._dirty_slots.add(slot)
             have += 1
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
         return True
+
+    def owned_blocks(self, slot: int) -> int:
+        """Blocks currently assigned to ``slot``'s table."""
+        return int((self.tables[slot] >= 0).sum())
+
+    def drain_dirty(self) -> set:
+        """Slots whose table rows changed since the last drain (clears the
+        set) — the engine's device-resident table mirror syncs these rows."""
+        dirty, self._dirty_slots = self._dirty_slots, set()
+        return dirty
 
     def free(self, slot: int) -> None:
         """Release a request's slot and blocks (FIFO recycle, stale table
@@ -335,6 +352,7 @@ class BlockManager:
             else:
                 self._free_blocks.append(blk)
         self.tables[slot] = -1
+        self._dirty_slots.add(slot)
         self._lengths[slot] = 0
         self._cached_tokens[slot] = 0
         self._resume.pop(slot, None)

@@ -41,6 +41,9 @@ class ServeRequest:
     slot: Optional[int] = None
     admitted_at: Optional[float] = None
     finished_at: Optional[float] = None
+    #: set when the engine stops the request before its budget (EOS token):
+    #: ``done`` then holds even though fewer than max_new_tokens were emitted.
+    finished_early: bool = False
     # wall clocks: t_arrived is stamped when the engine clock first passes
     # arrival_time (NOT at admission), so latency_s includes queue wait.
     t_arrived: Optional[float] = None
@@ -49,7 +52,7 @@ class ServeRequest:
 
     @property
     def done(self) -> bool:
-        return len(self.output) >= self.max_new_tokens
+        return self.finished_early or len(self.output) >= self.max_new_tokens
 
     @property
     def remaining(self) -> float:
@@ -153,13 +156,18 @@ class ContinuousScheduler:
         req.admitted_at = None
         req.t_admitted = None
         req.output = []
+        req.finished_early = False
         self.waiting.append(req)
 
     def evict_finished(self) -> List[ServeRequest]:
         """Release slots of finished requests (the per-step evict half)."""
         done = [r for r in self.active.values() if r.done]
         for req in done:
-            req.finished_at = float(self.step)
+            # the engine may have pre-stamped the exact finishing step (a
+            # multi-step decode horizon evicts only at horizon boundaries);
+            # only fill in the boundary step when it has not.
+            if req.finished_at is None:
+                req.finished_at = float(self.step)
             req.t_finished = time.perf_counter()
             self.pool.free(req.slot)
             del self.active[req.slot]

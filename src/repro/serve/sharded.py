@@ -10,12 +10,13 @@ jitted ``decode_step`` SPMD-sharded on a device mesh:
     the model axis),
   * NamedShardings for params (``param_pspecs``), the pooled decode cache
     (``launch.dryrun.cache_pspecs`` — the same specs the multi-pod dry-run
-    lowers against), and the per-step token/position vectors.
+    lowers against), and — per compacted decode width — the bucketed
+    token/pos/table shardings (``bucket_shardings``).
 
 The engine enters ``plan.rules()`` around tracing so every ``shard``/
 ``shard_spec``/``attention_scheme`` constraint inside the model is live; the
-jitted decode step is thereby the same fn the dry-run lowers, now actually
-executing over the mesh.
+jitted decode horizon steps through the same per-step fn the dry-run
+lowers, now actually executing over the mesh.
 """
 from __future__ import annotations
 
@@ -36,13 +37,36 @@ class ServeSharding:
     table: dict
     param_sharding: object
     cache_sharding: object
-    token_sharding: NamedSharding
-    pos_sharding: NamedSharding
     cache_pspec: object = field(default=None, repr=False)
 
     def rules(self):
         """Context manager installing the logical-axis rules for tracing."""
         return shd.axis_rules(self.mesh, self.table)
+
+    def axis_size(self, name: str) -> int:
+        """Size of one mesh axis (1 when the mesh does not carry it)."""
+        return dict(zip(self.mesh.axis_names,
+                        self.mesh.devices.shape)).get(name, 1)
+
+    def replicated(self) -> NamedSharding:
+        """Fully-replicated NamedSharding (the decode-state arrays: they are
+        a few int32 per slot — delta-updated from the host — so replication
+        beats scattering them)."""
+        return NamedSharding(self.mesh, P())
+
+    def bucket_shardings(self, width: int) -> dict:
+        """NamedShardings for one compacted decode width: the gathered
+        per-row tokens/pos/tables of a width-``width`` bucket shard over the
+        mesh 'data' axis when the width divides it (bucket widths are
+        rounded to multiples of 'data' for exactly this; only the capped
+        full-width bucket of a non-divisible pool falls back to
+        replicated)."""
+        ax = "data" if width % self.axis_size("data") == 0 else None
+        return {
+            "tokens": NamedSharding(self.mesh, P(ax, None)),
+            "pos": NamedSharding(self.mesh, P(ax)),
+            "tables": NamedSharding(self.mesh, P(ax, None)),
+        }
 
 
 def make_serve_sharding(cfg, n_slots: int, max_len: int, mesh=None, *,
@@ -83,14 +107,11 @@ def make_serve_sharding(cfg, n_slots: int, max_len: int, mesh=None, *,
         cspec = cache_pspecs(cfg, cshape, mesh, seq_shard=False,
                              batch=n_slots)
 
-    b_ax = "data" if n_slots % sizes.get("data", 1) == 0 else None
     return ServeSharding(
         mesh=mesh,
         table=table,
         param_sharding=shd.named(pspec, mesh),
         cache_sharding=shd.named(cspec, mesh),
-        token_sharding=NamedSharding(mesh, P(b_ax, None)),
-        pos_sharding=NamedSharding(mesh, P(b_ax)),
         cache_pspec=cspec,
     )
 

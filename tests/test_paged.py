@@ -542,7 +542,60 @@ def test_stats_phase_split_and_dispatch_counts():
                         block_size=4).run(_requests(cfg, [5, 6], max_new=3))
     assert st.prefill_dispatches > 0 and st.decode_dispatches > 0
     assert st.prefill_s > 0.0 and st.decode_s > 0.0
-    assert st.decode_dispatches == st.steps
+    # multi-step horizons: one jitted dispatch covers up to K decode steps
+    assert st.decode_horizon == 8
+    assert st.decode_dispatches <= st.steps
+    assert st.host_syncs > 0
+    one, s1 = ServeEngine(cfg, max_len=32, n_slots=2, cache="paged",
+                          block_size=4, decode_horizon=1).run(
+        _requests(cfg, [5, 6], max_new=3))
+    assert s1.decode_dispatches == s1.steps      # K=1 is the classic loop
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_paged_horizon_token_identity_under_churn(k):
+    """Paged K-step horizons with admission churn, mid-horizon finishes,
+    and block growth across horizon boundaries must stay token-identical
+    to the contiguous static reference."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths, arrivals = [5, 3, 8, 2, 6], [0.0, 0.0, 1.0, 3.0, 4.0]
+    budgets = [2, 9, 4, 7, 1]
+
+    def reqs(with_arrivals):
+        rs = _requests(cfg, lengths, arrivals if with_arrivals else None)
+        for r, b in zip(rs, budgets):
+            r.max_new_tokens = b
+        return rs
+
+    static, _ = ServeEngine(cfg, params=params, max_len=32,
+                            decode_horizon=1).run(reqs(False))
+    paged, st = ServeEngine(cfg, params=params, max_len=32, n_slots=3,
+                            cache="paged", block_size=4,
+                            decode_horizon=k).run(reqs(True))
+    for a, b in zip(static, paged):
+        assert a.output == b.output
+    if k > 1:
+        assert st.decode_dispatches < st.steps
+
+
+def test_paged_horizon_shrinks_before_preempting():
+    """A pool too tight to pre-allocate K=8 steps of growth must shrink the
+    horizon (down to the classic one-step loop) rather than thrash through
+    avoidable preemptions — and still match the static reference."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    reqs = lambda: _requests(cfg, [8, 8], max_new=8)
+    static, _ = ServeEngine(cfg, params=params, max_len=32,
+                            decode_horizon=1).run(reqs())
+    # 6 blocks of 4 cannot hold both requests at 16 tokens: the K=1 engine
+    # preempts; the K=8 engine must behave identically at the same pool.
+    paged, st = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                            cache="paged", block_size=4, n_blocks=6,
+                            watermark=0.0, decode_horizon=8).run(reqs())
+    assert st.preemptions >= 1
+    for a, b in zip(static, paged):
+        assert a.output == b.output
 
 
 def test_deferred_sharer_does_not_block_unrelated_admission():

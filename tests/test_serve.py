@@ -299,6 +299,87 @@ def test_vector_pos_rows_are_independent():
 
 
 # ---------------------------------------------------------------------------
+# device-resident multi-step decode horizon
+# ---------------------------------------------------------------------------
+def _staggered_requests(cfg, seed=5):
+    """Mixed lengths, staggered arrivals AND budgets: mid-horizon finishes
+    (budgets 1/2/4 end inside a K=3/8 horizon) plus admission churn (slot
+    reuse through a 2-slot pool)."""
+    lengths, arrivals = [5, 3, 8, 2, 6], [0.0, 0.0, 1.0, 3.0, 4.0]
+    budgets = [2, 9, 4, 7, 1]
+    reqs = _requests(cfg, lengths, arrivals, seed=seed)
+    for r, b in zip(reqs, budgets):
+        r.max_new_tokens = b
+    return reqs
+
+
+@pytest.mark.parametrize("k", [1, 3, 8])
+def test_decode_horizon_token_identity(k):
+    """A K-step device-resident horizon must be token-identical to the
+    classic per-token loop under mid-horizon finishes and admission churn
+    (K=1 IS the classic loop; larger K may only change dispatch counts)."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    ref = _staggered_requests(cfg)
+    for r in ref:
+        r.arrival_time = 0.0
+    ref, _ = ServeEngine(cfg, params=params, max_len=32,
+                         decode_horizon=1).run(ref)
+
+    out, st = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                          decode_horizon=k).run(_staggered_requests(cfg))
+    for a, b in zip(ref, out):
+        assert a.output == b.output
+    assert st.decode_horizon == k
+    assert all(r.finished_at is not None for r in out)
+    if k > 1:
+        # the scheduler intervenes at horizon boundaries: fewer jitted
+        # dispatches (and host syncs) than decode steps
+        assert st.decode_dispatches < st.steps
+        assert st.host_syncs < st.steps + st.prefill_dispatches + 1
+
+
+def test_horizon_dispatch_drop_static_batch():
+    """Uniform budgets in a static batch: K=8 must cover the whole decode
+    run in ceil((max_new - 1) / 8) horizon dispatches."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    reqs = lambda: _requests(cfg, [5, 3, 6], max_new=17)
+    one, s1 = ServeEngine(cfg, params=params, max_len=32,
+                          decode_horizon=1).run(reqs())
+    hor, s8 = ServeEngine(cfg, params=params, max_len=32,
+                          decode_horizon=8).run(reqs())
+    for a, b in zip(one, hor):
+        assert a.output == b.output
+    assert s1.decode_dispatches == 16          # 1 prefill + 16 decode tokens
+    assert s8.decode_dispatches == 2           # ceil(16 / 8)
+    assert s8.steps == s1.steps == 16
+
+
+def test_eos_token_stops_requests_early():
+    """A row emitting the EOS token freezes mid-horizon: its output is the
+    greedy output truncated at the first EOS (inclusive), it reports
+    ``done``, and other rows are unaffected."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    reqs = lambda: _requests(cfg, [5, 3, 6], max_new=8)
+    base, _ = ServeEngine(cfg, params=params, max_len=32).run(reqs())
+    eos = base[0].output[3]
+    out, _ = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                         eos_token=eos).run(reqs())
+    stopped = 0
+    for b, o in zip(base, out):
+        want = b.output
+        if eos in want:
+            want = want[:want.index(eos) + 1]
+            stopped += 1
+            assert o.finished_early
+        assert o.output == want
+        assert o.done
+    assert stopped >= 1
+
+
+# ---------------------------------------------------------------------------
 # sharded (host-mesh) serving
 # ---------------------------------------------------------------------------
 @needs_mesh
@@ -347,7 +428,10 @@ def test_sharded_ssm_family_runs():
 def test_contiguous_compaction_skips_dead_rows_exactly():
     """When completions stagger, the contiguous engine decodes only the
     live rows (bucketed) via gather-decode-scatter — outputs must stay
-    identical to per-request static serving while rows are saved."""
+    identical to per-request static serving while rows are saved.
+    ``decode_horizon=2`` keeps horizon boundaries inside the run: the
+    bucket can only shrink at a boundary, so one long horizon would
+    (correctly) decode full-width throughout."""
     cfg = get_config("llama3.2-1b", smoke=True)
     model = build_model(cfg)
     params = model.init(jax.random.key(0))
@@ -359,13 +443,51 @@ def test_contiguous_compaction_skips_dead_rows_exactly():
     reqs = lambda: [ServeRequest(p.copy(), max_new_tokens=m)
                     for p, m in zip(prompts, budgets)]
     pooled, stats = ServeEngine(cfg, params=params, max_len=32,
-                                n_slots=4).run(reqs())
+                                n_slots=4, decode_horizon=2).run(reqs())
     for r in pooled:
         solo, _ = ServeEngine(cfg, params=params, max_len=32).run(
             [ServeRequest(r.prompt.copy(),
                           max_new_tokens=r.max_new_tokens)])
         assert solo[0].output == r.output
     assert stats.decode_rows_saved > 0.0
+
+
+@needs_mesh
+@pytest.mark.parametrize("arch,cache", [
+    ("qwen2-0.5b", "contiguous"),
+    ("qwen2-0.5b", "paged"),
+    ("olmoe-1b-7b", "contiguous"),
+    ("olmoe-1b-7b", "paged"),
+])
+def test_sharded_bucketed_decode_parity(arch, cache):
+    """Width-bucketed sharded compaction (dense/moe x contiguous/paged):
+    staggered arrivals and budgets shrink the live set mid-run, so the
+    sharded engine decodes power-of-two buckets rounded to the mesh 'data'
+    axis instead of full n_slots width — outputs must stay token-identical
+    to a single-device static run, and rows must actually be saved."""
+    cfg = get_config(arch, smoke=True)
+    lengths, arrivals = [5, 3, 8, 2, 6], [0.0, 0.0, 1.0, 2.0, 2.0]
+    budgets = [2, 9, 4, 7, 3]
+
+    def reqs(with_arrivals):
+        rs = _requests(cfg, lengths,
+                       arrivals if with_arrivals else None)
+        for r, b in zip(rs, budgets):
+            r.max_new_tokens = b
+        return rs
+
+    single, _ = ServeEngine(cfg, max_len=32, decode_horizon=1).run(
+        reqs(False))
+    eng = sharded_engine(cfg, n_slots=8, max_len=32, cache=cache,
+                         block_size=8)
+    sharded, stats = eng.run(reqs(True))
+    for a, b in zip(single, sharded):
+        assert a.output == b.output
+    # the sharded pool no longer decodes full-width: the tail of the run
+    # has <= 4 live rows, which buckets to the 'data' axis width (4), so
+    # rows are saved even on the mesh.
+    assert stats.decode_rows_saved > 0.0
+    assert stats.max_active <= 5
 
 
 def test_contiguous_compaction_recurrent_family():
@@ -381,7 +503,7 @@ def test_contiguous_compaction_recurrent_family():
     reqs = lambda: [ServeRequest(p.copy(), max_new_tokens=m)
                     for p, m in zip(prompts, budgets)]
     pooled, stats = ServeEngine(cfg, params=params, max_len=32,
-                                n_slots=4).run(reqs())
+                                n_slots=4, decode_horizon=2).run(reqs())
     for r in pooled:
         solo, _ = ServeEngine(cfg, params=params, max_len=32).run(
             [ServeRequest(r.prompt.copy(),
