@@ -20,7 +20,9 @@ import numpy as np
 
 from benchmarks.common import FAST
 from repro.configs import get_config
-from repro.serve import ServeEngine, ServeRequest, sharded_engine
+from repro.serve import (ServeEngine, ServeRequest, Tenant, TenantRegistry,
+                         plan_allocation, profiles_from_requests,
+                         sharded_engine)
 
 ARCHS = ("qwen2-0.5b", "mamba2-780m")
 
@@ -100,6 +102,71 @@ def run():
     rows.extend(_paged_admission_rows(n, max_new))
     rows.extend(_prefix_cache_rows(n, max_new))
     rows.extend(_horizon_rows(n, max_new))
+    rows.extend(_tenant_rows())
+    return rows
+
+
+def _tenant_rows():
+    """Two-tenant SLO scenario at EQUAL pool/lane budget: a batch tenant
+    floods the block pool at step 0 (long prompts, long budgets, no SLO)
+    while a latency tenant trickles short requests in under a tight
+    step-clock SLO. The ``tenant-prop`` row is the capacity-proportional
+    baseline — FCFS admission, no budgets, the SLOs only SCORED — and the
+    ``tenant-slo`` row turns on the Synergy-on-serve mechanisms: SLO-slack
+    admission ordering plus the optimistic profiler's planned per-tenant
+    block/lane/horizon budgets. The latency tenant's p99 latency (decode
+    steps — deterministic, so gate-able across machines) and SLO
+    attainment are the rows' structured fields; the gate holds attainment
+    as a floor and p99 as a ceiling. Outputs stay token-identical either
+    way (tests/test_tenant.py pins that); only WHEN each request runs
+    moves."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    max_len, block = 64, 8
+    n_blocks, n_slots, lanes, k = 12, 6, 2, 8
+    registry = TenantRegistry([
+        Tenant("lat", weight=2.0, slo_steps=12.0),
+        Tenant("batch", weight=1.0)])
+
+    def reqs():
+        rng = np.random.default_rng(7)
+        out = [ServeRequest(
+            rng.integers(1, cfg.vocab_size, size=16).astype(np.int32),
+            max_new_tokens=16, arrival_time=0.0, tenant="batch")
+            for _ in range(4)]
+        out += [ServeRequest(
+            rng.integers(1, cfg.vocab_size, size=4).astype(np.int32),
+            max_new_tokens=4, arrival_time=2.0 + 4.0 * i, tenant="lat")
+            for i in range(4)]
+        return out
+
+    def units_for(r):
+        return -(-(len(r.prompt) + r.max_new_tokens) // block)
+
+    profiles = profiles_from_requests(registry, reqs(), total_units=n_blocks,
+                                      units_for=units_for, max_k=k)
+    allocation = plan_allocation(registry, profiles, n_blocks,
+                                 total_lanes=lanes, max_k=k,
+                                 watermark_units=1)
+
+    rows = []
+    for label, policy, alloc in (("tenant-prop", "fcfs", None),
+                                 ("tenant-slo", "slo", allocation)):
+        eng = ServeEngine(cfg, max_len=max_len, n_slots=n_slots,
+                          cache="paged", block_size=block, n_blocks=n_blocks,
+                          watermark=1.0 / n_blocks, prefill_lanes=lanes,
+                          decode_horizon=k, policy=policy,
+                          tenants=registry, allocation=alloc)
+        _, st = _run_warm(eng, reqs)
+        lat, bat = st.tenants["lat"], st.tenants["batch"]
+        row = _row(f"serve/{label}/{arch}", st)
+        row["slo_attainment"] = lat["slo_attainment"]
+        row["p99_latency_steps"] = lat["p99_latency_steps"]
+        row["derived"] += (f" lat_p99={lat['p99_latency_steps']:.1f} "
+                           f"lat_slo={lat['slo_attainment']:.2f} "
+                           f"batch_p99={bat['p99_latency_steps']:.1f} "
+                           f"pre={st.preemptions}")
+        rows.append(row)
     return rows
 
 

@@ -10,9 +10,11 @@ configuration (minutes); set BENCH_FULL=1 for paper-scale runs.
 fresh rows are compared against the records already in
 experiments/bench_results.json — ``decode_ms_per_tok`` within
 ``--tolerance`` (default 2.5x, generous because CI machines differ from the
-recording machine) and the machine-independent ``decode_dispatches`` /
-``host_syncs`` counts within 1.5x — and the baseline file is left
-untouched. Exit status 1 on any regression.
+recording machine), the machine-independent ``decode_dispatches`` /
+``host_syncs`` counts within 1.5x, and the tenant rows' step-clock
+``p99_latency_steps`` (ceiling) / ``slo_attainment`` (floor, higher is
+better) — and the baseline file is left untouched. Exit status 1 on any
+regression (including a baseline row that predates a newly gated field).
 
     PYTHONPATH=src python -m benchmarks.run bench_serve --check
 """
@@ -49,14 +51,19 @@ MODULES = [
 
 
 #: structured row fields the --check gate compares: {field: (tolerance
-#: factor | None = use --tolerance, absolute slack added to the bound)}.
-#: Wall-clock fields get a multiplicative band for machine speed plus an
-#: absolute ms floor so micro-rows are not gated on scheduler noise;
-#: dispatch/sync counts are deterministic for a given configuration, so a
-#: breached bound there means a real dispatch-count regression.
-CHECK_FIELDS = {"decode_ms_per_tok": (None, 2.0),
-                "decode_dispatches": (1.5, 0.0),
-                "host_syncs": (1.5, 0.0)}
+#: factor | None = use --tolerance, absolute slack, direction)}.
+#: direction "max" fails when got > want * tol + slack (costs: lower is
+#: better); "min" fails when got < want / tol - slack (scores: higher is
+#: better). Wall-clock fields get a multiplicative band for machine speed
+#: plus an absolute ms floor so micro-rows are not gated on scheduler
+#: noise; dispatch/sync counts and the tenant rows' step-clock latency /
+#: SLO-attainment fields are deterministic for a given configuration, so a
+#: breached bound there is a real regression.
+CHECK_FIELDS = {"decode_ms_per_tok": (None, 2.0, "max"),
+                "decode_dispatches": (1.5, 0.0, "max"),
+                "host_syncs": (1.5, 0.0, "max"),
+                "p99_latency_steps": (1.25, 2.0, "max"),
+                "slo_attainment": (1.0, 0.02, "min")}
 
 
 def _parse_args(argv):
@@ -86,20 +93,42 @@ def _parse_args(argv):
 
 def check_regressions(records, baseline, tolerance: float):
     """Compare fresh rows against the recorded baseline; returns a list of
-    human-readable regression strings (empty = gate passes). Rows or fields
-    absent from either side are skipped — the gate only tightens as the
-    baseline file accumulates rows."""
+    human-readable regression strings (empty = gate passes). Rows absent
+    from the baseline are skipped — the gate only tightens as the baseline
+    file accumulates rows — but a gated FIELD carried by only one side of
+    a shared row is an explicit failure: a baseline row that predates a
+    newly added field must be re-recorded, not silently skipped."""
     base = {r.get("name"): r for r in baseline}
     failures = []
     for rec in records:
         ref = base.get(rec.get("name"))
         if ref is None:
             continue
-        for field, (tol, slack) in CHECK_FIELDS.items():
+        for field, (tol, slack, direction) in CHECK_FIELDS.items():
             tol = tolerance if tol is None else tol
             got, want = rec.get(field), ref.get(field)
-            if got is None or want is None or not want:
+            if got is None and want is None:
+                continue        # neither side carries it (non-tenant rows)
+            if want is None:
+                failures.append(
+                    f"{rec['name']}: baseline row predates field {field!r} "
+                    f"— re-record it (benchmarks.run without --check)")
                 continue
+            if got is None:
+                failures.append(
+                    f"{rec['name']}: fresh row dropped gated field "
+                    f"{field!r} (baseline has {float(want):.2f})")
+                continue
+            if direction == "min":
+                bound = float(want) / tol - slack
+                if float(got) < bound:
+                    failures.append(
+                        f"{rec['name']}: {field} {float(got):.2f} < "
+                        f"{float(want):.2f} / {tol:g} - {slack:g} "
+                        f"(recorded baseline)")
+                continue
+            if not want:
+                continue        # zero-cost baseline: nothing to scale
             bound = float(want) * tol + slack
             if float(got) > bound:
                 failures.append(

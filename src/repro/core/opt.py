@@ -182,6 +182,66 @@ def solve_placement(jobs: Sequence[Job], cluster: Cluster,
     return placement, fragmented, dt
 
 
+def greedy_allocate(curves: Sequence, total: float, *,
+                    weights: Optional[Sequence[float]] = None,
+                    floors: Optional[Sequence[float]] = None,
+                    quantum: float = 1.0) -> List[float]:
+    """Greedy near-optimal split of ``total`` units of ONE resource.
+
+    The online sibling of ``solve_ideal``: maximize
+    ``sum_i w_i * curve_i(x_i)`` subject to ``sum_i x_i <= total`` and
+    ``x_i >= floor_i`` by repeatedly handing the next ``quantum`` to the
+    consumer with the highest weighted marginal gain. Optimal for concave
+    curves; near-optimal for the knee-shaped sensitivity curves Synergy
+    profiles (§4 — the serve-side ``TenantAllocator`` builds on this).
+
+    Step-shaped curves (a serve tenant's rate only jumps every
+    ``units_per_req`` units) are handled by lookahead: each consumer's
+    gain is the weighted RATE over the smallest stride of quanta that
+    shows one, and the winner receives that whole stride — a curve whose
+    jump granularity exceeds the quantum is not mistaken for saturated.
+
+    Once every curve is saturated (no positive gain within the remaining
+    budget) the remainder is handed out by weight so the budgets cover
+    the pool.
+    """
+    n = len(curves)
+    if n == 0:
+        return []
+    w = list(weights) if weights is not None else [1.0] * n
+    x = [float(f) for f in (floors if floors is not None else [0.0] * n)]
+    if sum(x) > total + 1e-9:
+        raise ValueError(
+            f"floors {x} already exceed the pool ({total} units)")
+    left = total - sum(x)
+    while left >= quantum:
+        best_i, best_rate, best_stride = -1, 0.0, 0
+        for i in range(n):
+            base = curves[i](x[i])
+            j = 1
+            while j * quantum <= left + 1e-9:
+                d = curves[i](x[i] + j * quantum) - base
+                if d > 1e-12:
+                    rate = w[i] * d / j
+                    if rate > best_rate:
+                        best_i, best_rate, best_stride = i, rate, j
+                    break
+                j += 1
+        if best_i < 0:
+            break
+        x[best_i] += best_stride * quantum
+        left -= best_stride * quantum
+    # all curves flat: spread the remainder by weight (largest first) so
+    # the per-consumer budgets still cover the whole pool.
+    order = sorted(range(n), key=lambda i: (-w[i], i))
+    j = 0
+    while left >= quantum:
+        x[order[j % n]] += quantum
+        left -= quantum
+        j += 1
+    return x
+
+
 def solve(jobs: Sequence[Job], cluster: Cluster, integer: bool = True,
           with_placement: bool = False, time_limit: float = 60.0) -> OptResult:
     result = solve_ideal(jobs, cluster, integer=integer, time_limit=time_limit)

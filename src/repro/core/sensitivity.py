@@ -155,6 +155,25 @@ class SensitivityMatrix:
                         best_cost, best = cost, (float(c), float(m))
         return best
 
+    def curve(self, mem: float):
+        """1-D rate curve along the CPU axis at a fixed ``mem`` — the shape
+        ``opt.greedy_allocate`` consumes (the serve-side tenant allocator
+        splits its block pool over these)."""
+        return lambda c: self.rate(c, mem)
+
+    def best_second_axis(self, cpus: float, knee: float = 0.95) -> float:
+        """Minimum mem-axis point reaching ``knee`` of the best rate
+        available at a fixed ``cpus`` — the per-axis knee (the serve
+        profiler reads the horizon-K knee at a tenant's block budget)."""
+        ci = int(np.searchsorted(self.cpu_points, cpus + 1e-9) - 1)
+        ci = max(0, min(ci, len(self.cpu_points) - 1))
+        row = self.W[ci]
+        target = float(row.max()) * knee
+        for mi, m in enumerate(self.mem_points):
+            if row[mi] >= target:
+                return float(m)
+        return float(self.mem_points[-1])
+
     def options(self) -> List[Tuple[float, float, float]]:
         """All (c, m, W) triples — the discrete space of the OPT ILP (§4.1)."""
         out = []

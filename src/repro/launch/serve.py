@@ -32,6 +32,22 @@ means all arrive at once.
 ``--verify`` re-runs the request set on a single-device static engine with a
 contiguous cache and checks per-request outputs are identical — the paged
 exactness invariant (greedy only).
+
+Multi-tenant serving (serve/tenant.py): ``--tenants N`` registers tenants
+t0..tN-1 and tags the request set across them (``--tenant-mix`` ratios,
+round-robin interleaved); ``--slo`` / ``--slo-s`` give per-tenant latency
+SLOs (comma lists, ``none`` = no target) and ``--tenant-weights`` the
+fairness weights. ``--policy slo`` orders admission by SLO slack, and the
+optimistic serve profiler + ``TenantAllocator`` plan per-tenant
+block/lane/horizon budgets the engine enforces (``--no-tenant-alloc``
+keeps the registry — tags, SLO scoring, slack policy — but drops the
+budgets: the capacity-proportional baseline). The summary gains a
+per-tenant block with p50/p99 latency and ``slo_attainment``; ``--verify``
+still holds — tenant mechanisms reorder, they never change tokens:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --engine continuous --cache paged --mesh host --slots 8 --batch 12 \
+        --tenants 2 --slo 24,none --policy slo --arrival-rate 2 --verify
 """
 import os
 import sys
@@ -46,11 +62,14 @@ import jax  # noqa: E402  (lock the device count before any repro import)
 import argparse     # noqa: E402
 import dataclasses  # noqa: E402
 import json         # noqa: E402
+import math         # noqa: E402
 
 import numpy as np  # noqa: E402
 
 from repro.configs import ARCH_IDS, get_config                    # noqa: E402
-from repro.serve import ServeEngine, ServeRequest, sharded_engine  # noqa: E402
+from repro.serve import (Tenant, TenantRegistry,                   # noqa: E402
+                         ServeEngine, ServeRequest, plan_allocation,
+                         profiles_from_requests, sharded_engine)
 
 
 def make_requests(cfg, n: int, prompt_len: int, max_new: int,
@@ -75,6 +94,70 @@ def make_requests(cfg, n: int, prompt_len: int, max_new: int,
     return reqs
 
 
+def _csv(spec, n: int, flag: str):
+    """Comma-list tenant flag -> n values (``none``/empty entry -> None)."""
+    if not spec:
+        return [None] * n
+    parts = [p.strip() for p in spec.split(",")]
+    if len(parts) != n:
+        raise SystemExit(f"{flag} needs {n} comma-separated values "
+                         f"(got {len(parts)})")
+    return [None if p.lower() in ("none", "") else float(p) for p in parts]
+
+
+def tag_tenants(reqs, ids, mix) -> None:
+    """Deterministically interleave the request set across tenants by the
+    mix ratios: request i goes to the tenant with the largest deficit
+    against its target share, so a 2:1 mix tags t0,t0,t1,t0,t0,t1,..."""
+    total = sum(mix)
+    counts = [0] * len(ids)
+    for i, r in enumerate(reqs):
+        j = max(range(len(ids)),
+                key=lambda k: (mix[k] * (i + 1) / total - counts[k], -k))
+        r.tenant = ids[j]
+        counts[j] += 1
+
+
+def build_tenancy(args, reqs, n_slots):
+    """Registry (+ profiler-planned allocation) for ``--tenants N``.
+
+    The optimistic serve profiler reads each tenant's class shape off its
+    tagged requests (footprint in cache units, offered concurrency) and
+    the allocator plans block/lane/horizon budgets for the engine's pool
+    geometry. ``--no-tenant-alloc`` keeps the registry — tags, SLO
+    scoring, slack policy — without budgets (the capacity-proportional
+    baseline)."""
+    n = args.tenants
+    slo = _csv(args.slo, n, "--slo")
+    slo_s = _csv(args.slo_s, n, "--slo-s")
+    wts = _csv(args.tenant_weights, n, "--tenant-weights")
+    mix = _csv(args.tenant_mix, n, "--tenant-mix")
+    ids = [f"t{i}" for i in range(n)]
+    registry = TenantRegistry([
+        Tenant(ids[i], weight=wts[i] if wts[i] is not None else 1.0,
+               slo_steps=slo[i], slo_s=slo_s[i]) for i in range(n)])
+    tag_tenants(reqs, ids, [m if m is not None else 1.0 for m in mix])
+    if not args.tenant_alloc:
+        return registry, None
+    if args.cache == "paged":
+        blocks_per_slot = -(-args.max_len // args.block_size)
+        total_units = args.blocks or (n_slots or args.batch) * blocks_per_slot
+        units_for = lambda r: -(-(len(r.prompt) + r.max_new_tokens)  # noqa: E731
+                                // args.block_size)
+        watermark_units = math.ceil(args.watermark * total_units)
+    else:
+        total_units = n_slots or args.batch
+        units_for = lambda r: 1                                      # noqa: E731
+        watermark_units = 0
+    profiles = profiles_from_requests(
+        registry, reqs, total_units=total_units, units_for=units_for,
+        max_k=args.decode_horizon)
+    allocation = plan_allocation(
+        registry, profiles, total_units, total_lanes=args.prefill_lanes,
+        max_k=args.decode_horizon, watermark_units=watermark_units)
+    return registry, allocation
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b", choices=ARCH_IDS)
@@ -84,7 +167,27 @@ def main() -> None:
     ap.add_argument("--cache", default="contiguous",
                     choices=["contiguous", "paged"])
     ap.add_argument("--mesh", default="single", choices=["single", "host"])
-    ap.add_argument("--policy", default="fcfs", choices=["fcfs", "sjf"])
+    ap.add_argument("--policy", default="fcfs",
+                    choices=["fcfs", "sjf", "slo"])
+    ap.add_argument("--tenants", type=int, default=0,
+                    help="register N tenants t0..tN-1 and tag the request "
+                         "set across them (0 = single-tenant)")
+    ap.add_argument("--slo", default="",
+                    help="per-tenant latency SLO in decode steps, comma "
+                         "list ('none' = no target), e.g. --slo 24,none")
+    ap.add_argument("--slo-s", default="",
+                    help="per-tenant wall-clock SLO in seconds (comma list; "
+                         "scored in the stats, never scheduled on)")
+    ap.add_argument("--tenant-weights", default="",
+                    help="per-tenant fairness weights (comma list, default 1)")
+    ap.add_argument("--tenant-mix", default="",
+                    help="per-tenant request-count ratios (comma list, "
+                         "default equal split), e.g. --tenant-mix 2,1")
+    ap.add_argument("--no-tenant-alloc", dest="tenant_alloc",
+                    action="store_false",
+                    help="keep tenant tags + SLO scoring but drop the "
+                         "profiler-planned budgets (capacity-proportional "
+                         "baseline)")
     ap.add_argument("--batch", type=int, default=8,
                     help="number of requests in the set")
     ap.add_argument("--slots", type=int, default=4,
@@ -129,17 +232,29 @@ def main() -> None:
 
     if args.verify and args.temperature > 0:
         ap.error("--verify is the greedy exactness path; drop --temperature")
+    if args.policy == "slo" and args.tenants <= 0:
+        ap.error("--policy slo needs --tenants N (slack comes from SLOs)")
 
     cfg = get_config(args.arch, smoke=args.preset == "smoke")
     n_slots = args.slots if args.engine == "continuous" else None
     n_blocks = args.blocks or None
+
+    # requests first: the optimistic serve profiler reads each tenant's
+    # class shape (footprint, concurrency) off the tagged request set.
+    reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
+                         args.arrival_rate, shared_prefix=args.shared_prefix)
+    registry = allocation = None
+    if args.tenants > 0:
+        registry, allocation = build_tenancy(args, reqs, n_slots)
+
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=n_blocks, watermark=args.watermark,
                      prefill_lanes=args.prefill_lanes,
                      prefix_cache=args.prefix_cache,
                      temperature=args.temperature, top_k=args.top_k,
                      decode_horizon=args.decode_horizon,
-                     eos_token=args.eos_token)
+                     eos_token=args.eos_token,
+                     tenants=registry, allocation=allocation)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
@@ -149,8 +264,6 @@ def main() -> None:
         engine = ServeEngine(cfg, max_len=args.max_len, n_slots=n_slots,
                              policy=args.policy, **engine_kw)
 
-    reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
-                         args.arrival_rate, shared_prefix=args.shared_prefix)
     out, stats = engine.run(reqs)
 
     record = {
@@ -164,6 +277,10 @@ def main() -> None:
         **dataclasses.asdict(stats),
         "sample_output": out[0].output[:8],
     }
+    if allocation is not None:
+        record["tenant_budgets"] = {
+            tid: dataclasses.asdict(s)
+            for tid, s in sorted(allocation.shares.items())}
 
     if args.verify:
         # the reference is the classic loop: single-device static engine,

@@ -10,10 +10,16 @@ from repro.serve.scheduler import (SERVE_POLICIES, ContinuousScheduler,
                                    ServeRequest)
 from repro.serve.sharded import (ServeSharding, make_serve_sharding,
                                  sharded_engine)
+from repro.serve.tenant import (SLOSlack, ServeClassProfile, Tenant,
+                                TenantAllocation, TenantAllocator,
+                                TenantRegistry, TenantShare, plan_allocation,
+                                profile_class, profiles_from_requests)
 
 __all__ = [
     "BlockManager", "CACHE_BACKENDS", "CachePool", "ContinuousScheduler",
-    "Request", "ServeEngine", "ServeRequest", "ServeSharding", "ServeStats",
-    "SERVE_POLICIES", "make_serve_sharding", "serve_step_fn",
-    "sharded_engine",
+    "Request", "ServeClassProfile", "ServeEngine", "ServeRequest",
+    "ServeSharding", "ServeStats", "SERVE_POLICIES", "SLOSlack", "Tenant",
+    "TenantAllocation", "TenantAllocator", "TenantRegistry", "TenantShare",
+    "make_serve_sharding", "plan_allocation", "profile_class",
+    "profiles_from_requests", "serve_step_fn", "sharded_engine",
 ]

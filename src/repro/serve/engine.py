@@ -74,7 +74,7 @@ import contextlib
 import functools
 import math
 import time
-from collections import deque
+from collections import Counter, deque
 from dataclasses import dataclass, field
 from typing import List, Optional, Tuple
 
@@ -88,6 +88,7 @@ from repro.models.api import Model, build_model
 from repro.serve.cache import CachePool
 from repro.serve.paged import BlockManager
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
+from repro.serve.tenant import SLOSlack, TenantAllocation, TenantRegistry
 
 #: back-compat alias — the original single-file engine exported ``Request``
 Request = ServeRequest
@@ -133,6 +134,19 @@ class ServeStats:
     p95_latency_steps: float
     mean_latency_s: float
     max_active: int = 0               # peak concurrently-decoding requests
+    # -- completion accounting -------------------------------------------------
+    unfinished: int = 0               # requests that never finished (or
+                                      # finished without wall-clock stamps —
+                                      # e.g. evicted at driver shutdown);
+                                      # they count as SLO misses so drops
+                                      # can never inflate attainment
+    slo_attainment: float = 1.0       # fraction of ALL requests meeting
+                                      # their tenant's SLO (1.0 when no
+                                      # tenant carries one)
+    #: per-tenant latency + SLO summary (tenant id -> dict with
+    #: p50/p99_latency_steps, p50/p99_latency_s, slo_attainment,
+    #: n_requests, unfinished, preemptions) — None without tenant tags
+    tenants: Optional[dict] = field(default=None)
     decode_rows_saved: float = 0.0    # live-slot compaction: fraction of
                                       # pool rows never decoded
     preemptions: int = 0              # paged: requests bounced on pool
@@ -266,6 +280,16 @@ class ServeEngine:
     token-identical under greedy decoding). ``eos_token`` stops a row early
     when it emits that token (the EOS half of the per-row stop mask; budget
     stops always apply).
+
+    ``tenants`` + ``allocation`` turn on Synergy-style multi-tenant serving
+    (serve/tenant.py): requests carry tenant tags, ``policy="slo"`` orders
+    admission by SLO slack, preemption victims are picked by LARGEST slack,
+    and a ``TenantAllocation`` adds per-tenant cache-unit budgets at
+    admission, per-tenant watermark headroom, prefill-lane shares, and a
+    per-boundary horizon cap from the allocator's K knee. Every mechanism
+    is ordering/allocation only — per-request outputs stay token-identical
+    to the single-tenant engine (the exactness invariant ``--verify``
+    checks end to end).
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
@@ -276,7 +300,9 @@ class ServeEngine:
                  temperature: float = 0.0, top_k: int = 0,
                  sample_seed: int = 0, prefill_lanes: int = 4,
                  prefix_cache: bool = True, decode_horizon: int = 8,
-                 eos_token: Optional[int] = None):
+                 eos_token: Optional[int] = None,
+                 tenants: Optional[TenantRegistry] = None,
+                 allocation: Optional[TenantAllocation] = None):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -302,6 +328,14 @@ class ServeEngine:
         self.top_k = int(top_k)
         self.decode_horizon = max(int(decode_horizon), 1)
         self.eos_token = None if eos_token is None else int(eos_token)
+        self.tenants = tenants
+        self.allocation = allocation
+        if policy == "slo" and tenants is None:
+            raise ValueError("policy='slo' needs a TenantRegistry "
+                             "(tenants=...) to compute slack")
+        if allocation is not None and tenants is None:
+            raise ValueError("a TenantAllocation needs its TenantRegistry "
+                             "(tenants=...) installed too")
         self._sample_key = jax.random.key(sample_seed)
         rng = rng if rng is not None else jax.random.key(0)
         with self._rules():
@@ -536,6 +570,64 @@ class ServeEngine:
                 counters = self._run_contiguous(reqs, n_slots)
 
         wall = time.perf_counter() - t0
+        return reqs, self._stats(reqs, counters, n_slots, wall)
+
+    # -- stats aggregation -----------------------------------------------------
+    def _finished(self, r: ServeRequest) -> bool:
+        """A request counts as finished only with BOTH clocks stamped:
+        ``latency_s is None`` (evicted mid-run at driver shutdown, or
+        never admitted) makes it ``unfinished`` — explicitly counted, and
+        an SLO miss, so drops can never inflate attainment."""
+        return (r.done and r.latency_steps is not None
+                and r.latency_s is not None)
+
+    def _meets_slo(self, r: ServeRequest) -> bool:
+        """Whether ``r`` finished inside its tenant's SLO (both clocks
+        when both targets are set; unfinished is always a miss; a tenant
+        without targets only asks for completion)."""
+        if not self._finished(r):
+            return False
+        t = self.tenants.get(r.tenant) if self.tenants is not None else None
+        if t is None:
+            return True
+        if t.slo_steps is not None and r.latency_steps > t.slo_steps:
+            return False
+        if t.slo_s is not None and r.latency_s > t.slo_s:
+            return False
+        return True
+
+    def _tenant_stats(self, reqs) -> Optional[dict]:
+        """Per-tenant p50/p99 latency (steps + wall) and SLO attainment —
+        None when neither a registry nor a non-default tag is present."""
+        tids = sorted({r.tenant for r in reqs})
+        if self.tenants is None and tids in ([], ["default"]):
+            return None
+        out = {}
+        for tid in tids:
+            rs = [r for r in reqs if r.tenant == tid]
+            steps = [r.latency_steps for r in rs if self._finished(r)]
+            walls = [r.latency_s for r in rs if self._finished(r)]
+            t = self.tenants.get(tid) if self.tenants is not None else None
+            met = sum(1 for r in rs if self._meets_slo(r))
+            out[tid] = {
+                "n_requests": len(rs),
+                "unfinished": sum(1 for r in rs if not self._finished(r)),
+                "preemptions": sum(r.n_preempted for r in rs),
+                "p50_latency_steps": (float(np.percentile(steps, 50))
+                                      if steps else 0.0),
+                "p99_latency_steps": (float(np.percentile(steps, 99))
+                                      if steps else 0.0),
+                "p50_latency_s": (float(np.percentile(walls, 50))
+                                  if walls else 0.0),
+                "p99_latency_s": (float(np.percentile(walls, 99))
+                                  if walls else 0.0),
+                "slo_steps": t.slo_steps if t is not None else None,
+                "slo_s": t.slo_s if t is not None else None,
+                "slo_attainment": met / len(rs) if rs else 1.0,
+            }
+        return out
+
+    def _stats(self, reqs, counters, n_slots, wall) -> ServeStats:
         new_tokens = sum(len(r.output) for r in reqs)
         lat_steps = [r.latency_steps for r in reqs
                      if r.latency_steps is not None]
@@ -543,6 +635,7 @@ class ServeEngine:
         steps = counters["steps"]
         rows_possible = steps * n_slots
         hit, total = counters["prefix_hits"], counters["prefix_total"]
+        met = sum(1 for r in reqs if self._meets_slo(r))
         stats = ServeStats(
             n_requests=len(reqs),
             new_tokens=new_tokens,
@@ -568,8 +661,11 @@ class ServeEngine:
             prefix_blocks_total=total,
             prefix_blocks_hit=hit,
             prefix_hit_rate=hit / total if total else 0.0,
+            unfinished=sum(1 for r in reqs if not self._finished(r)),
+            slo_attainment=met / len(reqs) if reqs else 1.0,
+            tenants=self._tenant_stats(reqs),
         )
-        return reqs, stats
+        return stats
 
     @staticmethod
     def _counters() -> dict:
@@ -579,6 +675,20 @@ class ServeEngine:
                     host_syncs=0, prefix_hits=0, prefix_total=0)
 
     # -- horizon scheduling helpers (host side) --------------------------------
+    def _make_sched(self, pool) -> ContinuousScheduler:
+        """The scheduler for one run: SLO-slack ordering when asked for
+        (``policy='slo'`` resolves against the tenant registry) and the
+        per-tenant budget check when an allocation is installed."""
+        policy = (SLOSlack(self.tenants) if self.policy == "slo"
+                  else self.policy)
+        return ContinuousScheduler(pool, policy, allocation=self.allocation)
+
+    def _slack(self, req, step) -> float:
+        """SLO slack in decode steps (+inf without a registry or SLO)."""
+        if self.tenants is None:
+            return math.inf
+        return self.tenants.slack(req, step)
+
     def _evict(self, sched, state: _DecodeState):
         """Evict finished requests and freeze their device rows, so a
         vacated slot gathered as horizon padding can never decode as live
@@ -604,17 +714,34 @@ class ServeEngine:
         capped to the longest remaining budget (every scanned step then
         serves at least one live row) and to the next open-loop arrival
         when the pool could admit it — the scheduler only intervenes at
-        horizon boundaries. The result is quantized DOWN to a power of
-        two: ``h`` is a static jit argument, so free-running values would
-        compile one K-step program per (width, h) pair — quantization
-        bounds the program set to log2(K) entries per width."""
+        horizon boundaries.
+
+        Tenant-aware boundaries (serve/tenant.py): the allocator's
+        per-tenant horizon knee caps ``h`` (the LARGEST knee among the
+        active tenants — a K past every knee buys no throughput), and when
+        a QUEUED request's SLO slack is shorter than the horizon, ``h``
+        shrinks toward that slack so the boundary — where eviction frees
+        capacity and slack-ordered admission runs — lands before the
+        deadline pressure instead of after it.
+
+        The result is quantized DOWN to a power of two: ``h`` is a static
+        jit argument, so free-running values would compile one K-step
+        program per (width, h) pair — quantization bounds the program set
+        to log2(K) entries per width."""
         rem = max(sched.active[s].max_new_tokens - len(sched.active[s].output)
                   for s in act)
         h = max(1, min(self.decode_horizon, rem))
+        if self.allocation is not None:
+            h = min(h, max(1, self.allocation.k_cap_for(
+                {sched.active[s].tenant for s in act})))
         nxt = sched.next_arrival()
         if (nxt is not None and nxt > sched.step
                 and self._could_admit_arrival(sched)):
             h = max(1, min(h, int(math.ceil(nxt - sched.step))))
+        if self.tenants is not None and sched.waiting:
+            urgent = min(self._slack(r, sched.step) for r in sched.waiting)
+            if math.isfinite(urgent):
+                h = max(1, min(h, int(max(1.0, urgent))))
         return _pow2_floor(h)
 
     def _decode_boundary(self, sched, pool, state, c, n_slots, dmult,
@@ -684,7 +811,7 @@ class ServeEngine:
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
-        sched = ContinuousScheduler(pool, self.policy)
+        sched = self._make_sched(pool)
         for i, r in enumerate(reqs):
             r.job_id = i
             sched.submit(r)
@@ -738,6 +865,28 @@ class ServeEngine:
         return c
 
     # -- paged loop --------------------------------------------------------------
+    def _next_lane_req(self, queue: deque, lanes) -> ServeRequest:
+        """Pick the next request to fill a freed prefill lane.
+
+        With a tenant allocation and a mixed-tenant queue, a tenant
+        already holding its lane share (``allocation.lane_share``) yields
+        the lane to the first queued request of an under-share tenant —
+        a burst of one tenant's long prompts cannot monopolize every lane
+        while another tenant's request waits. Work-conserving: when every
+        queued tenant sits at its share (or the queue is single-tenant)
+        the head proceeds anyway, so lanes never idle. Lane order only —
+        outputs are unchanged (prefill is per-request exact-length)."""
+        if self.allocation is None or len(queue) == 1:
+            return queue.popleft()
+        held = Counter(ln.req.tenant for ln in lanes)
+        if len({r.tenant for r in queue} | set(held)) <= 1:
+            return queue.popleft()
+        for i, r in enumerate(queue):
+            if held[r.tenant] < self.allocation.lane_share(r.tenant):
+                del queue[i]
+                return r
+        return queue.popleft()
+
     def _batched_paged_prefill(self, pool: BlockManager, reqs, step: int,
                                c: dict) -> None:
         """Prefill all joining requests through up to ``prefill_lanes``
@@ -760,7 +909,7 @@ class ServeEngine:
         lanes: List[_PrefillLane] = []
         while queue or lanes:
             while queue and len(lanes) < self.prefill_lanes:
-                r = queue.popleft()
+                r = self._next_lane_req(queue, lanes)
                 prompt = np.asarray(r.prompt, np.int32)
                 state = pool.resume_state(r.slot)
                 if is_moe and state is None:
@@ -851,8 +1000,17 @@ class ServeEngine:
                 raise RuntimeError(
                     "paged KV pool exhausted with a single active request; "
                     "grow n_blocks or lower max_new_tokens")
-            victim = max(sched.active.values(),
-                         key=lambda r: (r.admitted_at, r.slot))
+            # victim choice: with a tenant registry the LARGEST SLO slack
+            # goes first (a batch tenant without an SLO has infinite
+            # slack), so pool pressure lands on whoever can absorb the
+            # regeneration; without tenants, recency (the original rule).
+            if self.tenants is not None:
+                victim = max(sched.active.values(),
+                             key=lambda r: (self._slack(r, sched.step),
+                                            r.admitted_at, r.slot))
+            else:
+                victim = max(sched.active.values(),
+                             key=lambda r: (r.admitted_at, r.slot))
             victims.append(victim.slot)
             sched.preempt(victim)
 
@@ -865,7 +1023,12 @@ class ServeEngine:
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
-        sched = ContinuousScheduler(pool, self.policy)
+        if self.allocation is not None:
+            # per-tenant watermark headroom: a tenant's admissions may
+            # spend its OWN reserve (insensitive tenants donate theirs
+            # implicitly — see BlockManager._blocks_clear_watermark).
+            pool.tenant_reserves = self.allocation.reserves()
+        sched = self._make_sched(pool)
         for i, r in enumerate(reqs):
             r.job_id = i
             sched.submit(r)

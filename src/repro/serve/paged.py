@@ -90,6 +90,13 @@ class BlockManager:
         self.n_blocks = (n_blocks if n_blocks is not None
                          else n_slots * self.max_blocks)
         self.watermark_blocks = math.ceil(watermark * self.n_blocks)
+        #: per-tenant watermark headroom (tenant.TenantAllocation.reserves):
+        #: when set, a tenant admitting must keep only the OTHER tenants'
+        #: reserve free — its own headroom is admission-spendable, so
+        #: insensitive tenants' headroom is effectively stolen by the
+        #: sensitive ones the allocator favoured. Empty dict = the flat
+        #: single-watermark rule.
+        self.tenant_reserves: Dict[str, int] = {}
         self.buffers = model.init_paged_cache(self.n_blocks, block_size,
                                               dtype)
         self._free_blocks = deque(range(self.n_blocks))
@@ -187,11 +194,20 @@ class BlockManager:
                 f"which can never clear the {self.watermark_blocks}-block "
                 f"admission watermark on a {self.n_blocks}-block pool")
 
-    def _blocks_clear_watermark(self, n_new_blocks: int) -> bool:
-        """The single watermark rule: ``n_new_blocks`` fresh blocks fit
-        while the reserve stays free (``can_admit`` and ``alloc_for`` must
-        agree — alloc_for charges only the non-cached blocks)."""
-        return self.free_blocks - n_new_blocks >= self.watermark_blocks
+    def _blocks_clear_watermark(self, n_new_blocks: int,
+                                tenant: Optional[str] = None) -> bool:
+        """The watermark rule: ``n_new_blocks`` fresh blocks fit while the
+        reserve stays free (``can_admit`` and ``alloc_for`` must agree —
+        alloc_for charges only the non-cached blocks). With per-tenant
+        reserves installed, a known tenant only keeps the OTHER tenants'
+        headroom free — its own share of the reserve is spendable at its
+        admission."""
+        reserve = self.watermark_blocks
+        if tenant is not None and tenant in self.tenant_reserves:
+            reserve = min(reserve,
+                          sum(self.tenant_reserves.values())
+                          - self.tenant_reserves[tenant])
+        return self.free_blocks - n_new_blocks >= reserve
 
     def can_admit(self, n_tokens: int) -> bool:
         """Watermark admission: prompt blocks fit AND the high-watermark
@@ -240,7 +256,8 @@ class BlockManager:
                     return None
                 hits += 1
         if (not self._free_slots
-                or not self._blocks_clear_watermark(need - hits)):
+                or not self._blocks_clear_watermark(
+                    need - hits, getattr(req, "tenant", None))):
             return None
         slot = self._free_slots.popleft()
         self._in_use.add(slot)

@@ -27,7 +27,9 @@ import numpy as np
 from repro.core.policies import FIFO, SRTF, Policy
 from repro.serve.cache import CachePool
 
-#: serve-queue ordering policies (names per the serving literature)
+#: serve-queue ordering policies (names per the serving literature).
+#: "slo" (SLO-slack ordering) is constructed by the engine — it needs a
+#: ``tenant.TenantRegistry`` — and arrives here as a Policy instance.
 SERVE_POLICIES = {"fcfs": FIFO, "sjf": SRTF}
 
 
@@ -37,6 +39,10 @@ class ServeRequest:
     max_new_tokens: int = 16
     job_id: int = 0
     arrival_time: float = 0.0          # engine decode-step clock
+    #: tenant tag — resolved against the engine's ``TenantRegistry`` for
+    #: SLO slack, per-tenant budgets, and per-tenant stats (see
+    #: serve/tenant.py). Untagged requests share the "default" tenant.
+    tenant: str = "default"
     output: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     admitted_at: Optional[float] = None
@@ -44,6 +50,9 @@ class ServeRequest:
     #: set when the engine stops the request before its budget (EOS token):
     #: ``done`` then holds even though fewer than max_new_tokens were emitted.
     finished_early: bool = False
+    #: times this request was preempted under pool pressure (each bounce
+    #: regenerates its tokens identically after re-admission)
+    n_preempted: int = 0
     # wall clocks: t_arrived is stamped when the engine clock first passes
     # arrival_time (NOT at admission), so latency_s includes queue wait.
     t_arrived: Optional[float] = None
@@ -74,14 +83,26 @@ class ServeRequest:
 
 
 class ContinuousScheduler:
-    """Admission + eviction over a ``CachePool``, ordered by a queue policy."""
+    """Admission + eviction over a ``CachePool``, ordered by a queue policy.
 
-    def __init__(self, pool: CachePool, policy: str = "fcfs"):
-        if policy not in SERVE_POLICIES:
+    ``policy`` is a registered name or a ``core.policies.Policy`` instance
+    (the engine passes ``tenant.SLOSlack`` for SLO-slack ordering).
+    ``allocation`` (a ``tenant.TenantAllocation``) adds a per-tenant
+    cache-unit budget check at admission: a request over its tenant's
+    budget is skipped — NOT queued-blocking, so other tenants' admissible
+    requests behind it still admit this round.
+    """
+
+    def __init__(self, pool: CachePool, policy="fcfs", allocation=None):
+        if isinstance(policy, Policy):
+            self.policy: Policy = policy
+        elif policy in SERVE_POLICIES:
+            self.policy = SERVE_POLICIES[policy]()
+        else:
             raise KeyError(f"unknown serve policy {policy!r}; "
                            f"known: {sorted(SERVE_POLICIES)}")
         self.pool = pool
-        self.policy: Policy = SERVE_POLICIES[policy]()
+        self.allocation = allocation
         self.waiting: List[ServeRequest] = []
         self.active: Dict[int, ServeRequest] = {}
         #: admitted-but-not-yet-prefilled requests: the engine drains this
@@ -115,6 +136,13 @@ class ContinuousScheduler:
                 r.t_arrived = now
         admitted = []
         for req in self.policy.order(ready, float(self.step)):
+            # tenant budget: a request past its tenant's cache-unit budget
+            # is skipped (its tenant already holds its allocated share) —
+            # other tenants' requests behind it still admit this round.
+            if (self.allocation is not None
+                    and not self.allocation.admissible(req, self.active,
+                                                       self.pool)):
+                continue
             # paged pools admit by free *blocks* (length-proportional, with a
             # watermark reserve); slot pools by free slots.
             slot = (self.pool.alloc_for(req)
@@ -157,6 +185,7 @@ class ContinuousScheduler:
         req.t_admitted = None
         req.output = []
         req.finished_early = False
+        req.n_preempted += 1
         self.waiting.append(req)
 
     def evict_finished(self) -> List[ServeRequest]:

@@ -1,0 +1,344 @@
+"""Multi-tenant serving tests: registry/slack arithmetic, the greedy
+allocator against hand-computed splits, the optimistic serve profiler's
+knees, SLO-slack admission and preemption ordering, per-tenant stats (the
+``unfinished`` accounting), and the tenant-isolation exactness invariant —
+a mixed-tenant run is token-identical to the single-tenant reference on
+both cache backends."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.opt import greedy_allocate
+from repro.models.api import build_model
+from repro.serve import (SLOSlack, CachePool, ContinuousScheduler,
+                         ServeEngine, ServeRequest, Tenant, TenantAllocation,
+                         TenantAllocator, TenantRegistry, TenantShare,
+                         plan_allocation, profiles_from_requests)
+from repro.serve.tenant import calibrate, profile_class, serve_rate
+
+
+def _model(arch="llama3.2-1b"):
+    return build_model(get_config(arch, smoke=True))
+
+
+def _requests(cfg, lengths, arrivals=None, max_new=5, seed=5, tenants=None):
+    rng = np.random.default_rng(seed)
+    arrivals = arrivals or [0.0] * len(lengths)
+    tenants = tenants or ["default"] * len(lengths)
+    return [ServeRequest(rng.integers(1, cfg.vocab_size, size=s)
+                         .astype(np.int32),
+                         max_new_tokens=max_new, arrival_time=a, tenant=t)
+            for s, a, t in zip(lengths, arrivals, tenants)]
+
+
+def _registry():
+    return TenantRegistry([Tenant("lat", weight=2.0, slo_steps=12.0),
+                           Tenant("batch")])
+
+
+# ---------------------------------------------------------------------------
+# registry + slack
+# ---------------------------------------------------------------------------
+def test_registry_register_get_and_duplicate():
+    reg = _registry()
+    assert reg.get("lat").slo_steps == 12.0
+    assert "batch" in reg and "nope" not in reg
+    assert reg.ids == ["batch", "lat"]
+    with pytest.raises(ValueError):
+        reg.register(Tenant("lat"))
+    with pytest.raises(ValueError):
+        Tenant("bad", weight=0.0)
+
+
+def test_slack_arithmetic():
+    reg = TenantRegistry([Tenant("t", slo_steps=10.0)])
+    r = ServeRequest(np.arange(1, 4, dtype=np.int32), max_new_tokens=5,
+                     arrival_time=2.0, tenant="t")
+    r.output = [7, 7]
+    # deadline 2 + 10 = 12; projected finish 6 + (5 - 2) = 9
+    assert reg.slack(r, now=6.0) == 3.0
+    # no SLO / unknown tenant -> infinite slack (orders last, preempts first)
+    r.tenant = "unknown"
+    assert reg.slack(r, 6.0) == math.inf
+    reg2 = TenantRegistry([Tenant("t")])
+    r.tenant = "t"
+    assert reg2.slack(r, 6.0) == math.inf
+
+
+# ---------------------------------------------------------------------------
+# greedy allocator (core/opt.py)
+# ---------------------------------------------------------------------------
+def test_greedy_allocate_hand_computed_knees():
+    # curve A: slope 1 up to 4; curve B: slope 0.5 up to 10. Greedy hands
+    # A its 4 units first (higher marginal), then B the remaining 6.
+    a = lambda x: float(min(x, 4))
+    b = lambda x: 0.5 * float(min(x, 10))
+    assert greedy_allocate([a, b], 10.0) == [4.0, 6.0]
+
+
+def test_greedy_allocate_floors_and_weighted_remainder():
+    flat = lambda x: 0.0
+    # every curve flat: the remainder spreads round-robin, heaviest first
+    assert greedy_allocate([flat, flat], 5.0, weights=[2.0, 1.0]) == [3.0, 2.0]
+    with pytest.raises(ValueError):
+        greedy_allocate([flat], 2.0, floors=[3.0])
+    got = greedy_allocate([flat, flat], 6.0, floors=[4.0, 1.0])
+    assert got[0] >= 4.0 and got[1] >= 1.0 and sum(got) == 6.0
+
+
+# ---------------------------------------------------------------------------
+# optimistic serve profiler
+# ---------------------------------------------------------------------------
+def test_calibrate_roundtrips_the_rate_model():
+    t_tok, t_fixed, n, kmax = 2e-3, 8e-3, 4, 8
+    r1 = serve_rate(8, 1, units_per_req=2, concurrency=n, t_tok=t_tok,
+                    t_fixed=t_fixed)
+    rk = serve_rate(8, kmax, units_per_req=2, concurrency=n, t_tok=t_tok,
+                    t_fixed=t_fixed)
+    got_tok, got_fixed = calibrate(r1, rk, n, kmax)
+    assert got_tok == pytest.approx(t_tok, rel=1e-6)
+    assert got_fixed == pytest.approx(t_fixed, rel=1e-6)
+
+
+def test_profile_class_knees():
+    # 4 requests of 2 units each: the units axis saturates at 8 of the 16
+    # pool units, the K axis amortizes t_fixed away.
+    p = profile_class("t", units_per_req=2, concurrency=4, total_units=16,
+                      max_k=8)
+    m = p.matrix
+    assert m.rate(8, 8) == m.rate(16, 8)            # flat past the knee
+    assert m.rate(4, 8) < m.rate(8, 8)              # climbing before it
+    assert m.rate(8, 1) < m.rate(8, 8)              # K amortization
+    assert m.best_second_axis(8, knee=0.999) <= 8
+    assert p.lane_curve()(2) == 2 and p.lane_curve()(9) == 4
+
+
+def test_allocator_hand_computed_donation():
+    """lat wants 2 units (2 x 1), batch wants 8 (4 x 2): on a 10-unit pool
+    the greedy split lands exactly on the knees — the insensitive tenant
+    cannot hoard units past where its curve flattens."""
+    reg = _registry()
+    profiles = {
+        "lat": profile_class("lat", units_per_req=1, concurrency=2,
+                             total_units=10, max_k=8),
+        "batch": profile_class("batch", units_per_req=2, concurrency=4,
+                               total_units=10, max_k=8),
+    }
+    alloc = TenantAllocator(reg, profiles).plan(10, total_lanes=4, max_k=8,
+                                                watermark_units=2)
+    lat, bat = alloc.share("lat"), alloc.share("batch")
+    assert lat.units == 2 and bat.units == 8
+    assert lat.units + bat.units == alloc.total_units
+    assert 1 <= lat.k_cap <= 8 and 1 <= bat.k_cap <= 8
+    assert lat.lanes >= 1 and bat.lanes >= 1
+    assert lat.lanes + bat.lanes <= 4
+    assert lat.headroom + bat.headroom == 2
+    assert alloc.reserves() == {"lat": lat.headroom, "batch": bat.headroom}
+    # horizon cap for a boundary: the LARGEST knee among the active tenants
+    assert alloc.k_cap_for({"lat", "batch"}) == max(lat.k_cap, bat.k_cap)
+    assert alloc.k_cap_for(set()) == 8
+
+
+def test_allocator_missing_profile_raises():
+    with pytest.raises(ValueError, match="no serve profile"):
+        TenantAllocator(_registry(), {})
+
+
+def test_admissible_budget_and_no_starvation():
+    share = TenantShare("batch", units=1, k_cap=8, lanes=1, headroom=0)
+    alloc = TenantAllocation(shares={"batch": share}, total_units=4, max_k=8)
+    pool = object()                                  # slot pool: 1 unit/req
+    r1 = ServeRequest(np.arange(1, 4, dtype=np.int32), tenant="batch")
+    r2 = ServeRequest(np.arange(1, 4, dtype=np.int32), tenant="batch")
+    free = ServeRequest(np.arange(1, 4, dtype=np.int32), tenant="lat")
+    assert alloc.admissible(r1, {}, pool)            # first request: always
+    r1.slot = 0
+    assert not alloc.admissible(r2, {0: r1}, pool)   # over the 1-unit budget
+    assert alloc.admissible(free, {0: r1}, pool)     # no share -> no budget
+
+
+# ---------------------------------------------------------------------------
+# SLO-slack ordering: admission + preemption
+# ---------------------------------------------------------------------------
+def test_slo_slack_admission_ordering():
+    model = _model()
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reg = _registry()
+
+    def submit(policy):
+        sched = ContinuousScheduler(CachePool(model, 1, 32), policy)
+        reqs = _requests(cfg, [4, 4], tenants=["batch", "lat"])
+        for i, r in enumerate(reqs):
+            r.job_id = i
+            sched.submit(r)
+        return sched.admit()[0].tenant
+
+    # FCFS tie-breaks on submission order -> the batch request wins the
+    # single slot; slack ordering puts the SLO-carrying tenant first.
+    assert submit("fcfs") == "batch"
+    assert submit(SLOSlack(reg)) == "lat"
+
+
+def test_preemption_victim_is_largest_slack():
+    """Pool pressure with a tenant registry must land on the tenant that
+    can absorb it (no SLO -> infinite slack) even when the SLO tenant was
+    admitted LATER — the recency rule would pick the opposite victim —
+    and outputs still match the static reference exactly."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    reg = TenantRegistry([Tenant("lat", slo_steps=40.0), Tenant("batch")])
+
+    def reqs():
+        return _requests(cfg, [8, 8], arrivals=[0.0, 2.0], max_new=8,
+                         tenants=["batch", "lat"])
+
+    static, _ = ServeEngine(cfg, params=params, max_len=32).run(
+        _requests(cfg, [8, 8], max_new=8))
+    # both requests grow to 16 tokens = 4 blocks; 6 blocks force preemption
+    out, st = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                          cache="paged", block_size=4, n_blocks=6,
+                          watermark=0.0, tenants=reg).run(reqs())
+    assert st.preemptions >= 1
+    by_tenant = {r.tenant: r for r in out}
+    assert by_tenant["batch"].n_preempted >= 1
+    assert by_tenant["lat"].n_preempted == 0
+    for a, b in zip(static, out):
+        assert a.output == b.output
+
+
+# ---------------------------------------------------------------------------
+# tenant-aware horizon choice
+# ---------------------------------------------------------------------------
+class _FakeSched:
+    def __init__(self, active, waiting, step):
+        self.active, self.waiting, self.step = active, waiting, step
+
+    def next_arrival(self):
+        return min((r.arrival_time for r in self.waiting), default=None)
+
+
+def test_pick_h_allocation_k_cap_and_waiting_slack():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reg = _registry()
+    shares = {"batch": TenantShare("batch", units=8, k_cap=2, lanes=1,
+                                   headroom=0),
+              "lat": TenantShare("lat", units=8, k_cap=8, lanes=1,
+                                 headroom=0)}
+    alloc = TenantAllocation(shares=shares, total_units=16, max_k=8)
+    eng = ServeEngine(cfg, max_len=32, decode_horizon=8, tenants=reg,
+                      allocation=alloc)
+    running = ServeRequest(np.arange(1, 5, dtype=np.int32),
+                           max_new_tokens=100, tenant="batch")
+    running.slot = 0
+    # active tenant's knee caps the horizon: k_cap=2 beats decode_horizon=8
+    assert eng._pick_h(_FakeSched({0: running}, [], 0), [0]) == 2
+    # a queued SLO request with slack 3 shrinks h toward the boundary
+    running2 = ServeRequest(np.arange(1, 5, dtype=np.int32),
+                            max_new_tokens=100, tenant="lat")
+    running2.slot = 0
+    urgent = ServeRequest(np.arange(1, 5, dtype=np.int32), max_new_tokens=3,
+                          arrival_time=0.0, tenant="lat")  # slack = 12 - 3
+    sched = _FakeSched({0: running2}, [urgent], 6)
+    assert eng._pick_h(sched, [0]) == 2               # pow2_floor(12-3-6)=2
+
+
+# ---------------------------------------------------------------------------
+# per-tenant stats + the unfinished accounting
+# ---------------------------------------------------------------------------
+def _stamped(cfg, tenant, steps, wall, seed=0):
+    r = ServeRequest(np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+                     arrival_time=0.0, tenant=tenant)
+    r.output = [1, 2]
+    r.finished_at = float(steps)
+    r.t_arrived, r.t_finished = 0.0, float(wall)
+    return r
+
+
+def test_stats_unfinished_cannot_inflate_attainment():
+    """A dropped request (done but never wall-clock stamped) counts as
+    ``unfinished`` and an SLO miss — attainment reflects ALL requests."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reg = TenantRegistry([Tenant("lat", slo_steps=10.0)])
+    eng = ServeEngine(cfg, max_len=32, tenants=reg)
+    ok = _stamped(cfg, "lat", steps=5, wall=0.1)
+    dropped = ServeRequest(np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
+                           tenant="lat")
+    dropped.output = [1, 2]                  # done...
+    dropped.finished_at = 5.0                # ...step clock stamped...
+    assert dropped.latency_s is None         # ...but no wall stamps
+    stats = eng._stats([ok, dropped], eng._counters() | {"steps": 8},
+                       n_slots=2, wall=1.0)
+    assert stats.unfinished == 1
+    assert stats.slo_attainment == 0.5
+    assert stats.tenants["lat"]["unfinished"] == 1
+    assert stats.tenants["lat"]["slo_attainment"] == 0.5
+    assert stats.tenants["lat"]["slo_steps"] == 10.0
+
+
+def test_stats_slo_miss_on_each_clock():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reg = TenantRegistry([Tenant("t", slo_steps=10.0, slo_s=1.0)])
+    eng = ServeEngine(cfg, max_len=32, tenants=reg)
+    fast = _stamped(cfg, "t", steps=5, wall=0.1)
+    slow_steps = _stamped(cfg, "t", steps=20, wall=0.1)
+    slow_wall = _stamped(cfg, "t", steps=5, wall=5.0)
+    stats = eng._stats([fast, slow_steps, slow_wall],
+                       eng._counters() | {"steps": 20}, n_slots=2, wall=1.0)
+    assert stats.slo_attainment == pytest.approx(1 / 3)
+    assert stats.unfinished == 0
+
+
+def test_tenant_stats_none_without_tags_or_registry():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    eng = ServeEngine(cfg, max_len=32)
+    reqs = [_stamped(cfg, "default", 3, 0.1)]
+    assert eng._stats(reqs, eng._counters() | {"steps": 4},
+                      n_slots=1, wall=1.0).tenants is None
+
+
+def test_engine_validates_tenant_wiring():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    with pytest.raises(ValueError, match="slo"):
+        ServeEngine(cfg, max_len=32, policy="slo")
+    alloc = TenantAllocation(shares={}, total_units=4, max_k=8)
+    with pytest.raises(ValueError, match="TenantRegistry"):
+        ServeEngine(cfg, max_len=32, allocation=alloc)
+
+
+# ---------------------------------------------------------------------------
+# tenant isolation: the exactness invariant
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("arch", ["llama3.2-1b", "olmoe-1b-7b"])
+@pytest.mark.parametrize("cache", ["contiguous", "paged"])
+def test_mixed_tenant_run_token_identical(arch, cache):
+    """Every tenant mechanism reorders WHO runs WHEN — never what a request
+    computes: a mixed-tenant SLO run with planned budgets must emit exactly
+    the tokens of the untagged single-tenant static reference."""
+    cfg = get_config(arch, smoke=True)
+    params = build_model(cfg).init(jax.random.key(0))
+    lengths, arrivals = [5, 3, 7, 4], [0.0, 1.0, 2.0, 3.0]
+    tags = ["batch", "lat", "batch", "lat"]
+    reg = _registry()
+
+    static, _ = ServeEngine(cfg, params=params, max_len=32).run(
+        _requests(cfg, lengths, max_new=5))
+
+    reqs = _requests(cfg, lengths, arrivals=arrivals, max_new=5, tenants=tags)
+    kw = dict(cache="paged", block_size=4, n_blocks=12,
+              watermark=0.0) if cache == "paged" else {}
+    total = 12 if cache == "paged" else 2
+    units_for = ((lambda r: -(-(len(r.prompt) + r.max_new_tokens) // 4))
+                 if cache == "paged" else None)
+    profiles = profiles_from_requests(reg, reqs, total_units=total,
+                                      units_for=units_for, max_k=4)
+    alloc = plan_allocation(reg, profiles, total, total_lanes=2, max_k=4,
+                            watermark_units=1 if cache == "paged" else 0)
+    out, st = ServeEngine(cfg, params=params, max_len=32, n_slots=2,
+                          policy="slo", decode_horizon=4, tenants=reg,
+                          allocation=alloc, **kw).run(reqs)
+    assert st.tenants is not None and set(st.tenants) == {"batch", "lat"}
+    for a, b in zip(static, out):
+        assert a.output == b.output
