@@ -103,7 +103,28 @@ def run():
     rows.extend(_prefix_cache_rows(n, max_new))
     rows.extend(_horizon_rows(n, max_new))
     rows.extend(_tenant_rows())
+    rows.extend(_obs_rows(n, max_new))
     return rows
+
+
+def _obs_rows(n, max_new):
+    """Event tracing cost, as a gated row: the staggered paged workload
+    with a full ``obs.Tracer`` attached. Its ``decode_ms_per_tok`` bound
+    keeps tracing-ON overhead inside the normal tolerance band, while the
+    tracing-OFF contract — hooks compiling down to one falsy branch — is
+    bounded by every OTHER serve row in this module, which all run with
+    the default NullTracer against the same recorded baseline."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    from repro.obs import Tracer
+    eng = ServeEngine(cfg, max_len=64, n_slots=max(2, n // 2), cache="paged",
+                      block_size=8, tracer=Tracer())
+    _, st = _run_warm(eng, lambda: _requests(cfg, n, max_new, stagger=True))
+    row = _row(f"serve/obs-traced/{arch}", st)
+    row["derived"] += (f" events={len(eng.tracer)} "
+                       f"qd={st.mean_queue_depth:.1f} "
+                       f"occ={st.mean_occupancy:.2f}")
+    return [row]
 
 
 def _tenant_rows():

@@ -13,8 +13,11 @@ experiments/bench_results.json — ``decode_ms_per_tok`` within
 recording machine), the machine-independent ``decode_dispatches`` /
 ``host_syncs`` counts within 1.5x, and the tenant rows' step-clock
 ``p99_latency_steps`` (ceiling) / ``slo_attainment`` (floor, higher is
-better) — and the baseline file is left untouched. Exit status 1 on any
-regression (including a baseline row that predates a newly gated field).
+better) — and the baseline file is left untouched. A gate failure prints
+ONE line per offending row naming every out-of-band field. Exit status 1
+on any regression — including a baseline row predating a newly gated
+field, a baseline row whose module ran without reproducing it, or a
+module that errored outright.
 
     PYTHONPATH=src python -m benchmarks.run bench_serve --check
 """
@@ -91,56 +94,82 @@ def _parse_args(argv):
     return filters, check, tolerance
 
 
-def check_regressions(records, baseline, tolerance: float):
+def _field_breaches(rec, ref, tolerance: float):
+    """Every gated field of one (fresh, baseline) row pair that is out of
+    band — ALL of them, not just the first, so one gate run names every
+    problem a row has."""
+    breaches = []
+    for field, (tol, slack, direction) in CHECK_FIELDS.items():
+        tol = tolerance if tol is None else tol
+        got, want = rec.get(field), ref.get(field)
+        if got is None and want is None:
+            continue            # neither side carries it (non-tenant rows)
+        if want is None:
+            breaches.append(
+                f"baseline predates field {field!r} — re-record it "
+                f"(benchmarks.run without --check)")
+            continue
+        if got is None:
+            breaches.append(
+                f"fresh row dropped gated field {field!r} "
+                f"(baseline has {float(want):.2f})")
+            continue
+        if direction == "min":
+            bound = float(want) / tol - slack
+            if float(got) < bound:
+                breaches.append(
+                    f"{field} {float(got):.2f} < {float(want):.2f} / "
+                    f"{tol:g} - {slack:g}")
+            continue
+        if not want:
+            continue            # zero-cost baseline: nothing to scale
+        bound = float(want) * tol + slack
+        if float(got) > bound:
+            breaches.append(
+                f"{field} {float(got):.2f} > {float(want):.2f} * "
+                f"{tol:g} + {slack:g}")
+    return breaches
+
+
+def check_regressions(records, baseline, tolerance: float,
+                      ran_modules=frozenset()):
     """Compare fresh rows against the recorded baseline; returns a list of
-    human-readable regression strings (empty = gate passes). Rows absent
-    from the baseline are skipped — the gate only tightens as the baseline
-    file accumulates rows — but a gated FIELD carried by only one side of
-    a shared row is an explicit failure: a baseline row that predates a
-    newly added field must be re-recorded, not silently skipped."""
+    human-readable regression strings (empty = gate passes), ONE per
+    offending row, naming every out-of-band field of that row in one pass
+    — a gate failure reads as the full repair list, not the first symptom.
+
+    Rows absent from the baseline are skipped — the gate only tightens as
+    the baseline file accumulates rows — but a gated FIELD carried by only
+    one side of a shared row fails explicitly (a baseline row predating a
+    newly added field must be re-recorded), and a BASELINE row whose
+    module ran this pass without reproducing it fails too: a benchmark
+    that silently stopped emitting a gated row is a regression, not a
+    skip. Baseline rows without a recorded ``module`` predate that key and
+    are exempt from the missing-row check."""
     base = {r.get("name"): r for r in baseline}
+    fresh = {r.get("name") for r in records}
     failures = []
     for rec in records:
         ref = base.get(rec.get("name"))
         if ref is None:
             continue
-        for field, (tol, slack, direction) in CHECK_FIELDS.items():
-            tol = tolerance if tol is None else tol
-            got, want = rec.get(field), ref.get(field)
-            if got is None and want is None:
-                continue        # neither side carries it (non-tenant rows)
-            if want is None:
-                failures.append(
-                    f"{rec['name']}: baseline row predates field {field!r} "
-                    f"— re-record it (benchmarks.run without --check)")
-                continue
-            if got is None:
-                failures.append(
-                    f"{rec['name']}: fresh row dropped gated field "
-                    f"{field!r} (baseline has {float(want):.2f})")
-                continue
-            if direction == "min":
-                bound = float(want) / tol - slack
-                if float(got) < bound:
-                    failures.append(
-                        f"{rec['name']}: {field} {float(got):.2f} < "
-                        f"{float(want):.2f} / {tol:g} - {slack:g} "
-                        f"(recorded baseline)")
-                continue
-            if not want:
-                continue        # zero-cost baseline: nothing to scale
-            bound = float(want) * tol + slack
-            if float(got) > bound:
-                failures.append(
-                    f"{rec['name']}: {field} {float(got):.2f} > "
-                    f"{float(want):.2f} * {tol:g} + {slack:g} "
-                    f"(recorded baseline)")
+        breaches = _field_breaches(rec, ref, tolerance)
+        if breaches:
+            failures.append(f"{rec['name']}: " + "; ".join(breaches)
+                            + " (recorded baseline)")
+    for ref in baseline:
+        if (ref.get("name") not in fresh
+                and ref.get("module") in ran_modules):
+            failures.append(
+                f"{ref['name']}: baseline row missing from this run "
+                f"(module {ref['module']} ran but did not emit it)")
     return failures
 
 
 def main() -> None:
     filters, check, tolerance = _parse_args(sys.argv[1:])
     records = []
+    ran_modules, errored = set(), []
     print("name,us_per_call,derived")
     t_start = time.time()
     for mod_name in MODULES:
@@ -152,10 +181,14 @@ def main() -> None:
         except Exception:
             print(f"{mod_name},0,ERROR")
             traceback.print_exc()
+            errored.append(mod_name)
             continue
+        ran_modules.add(mod_name)
         for r in rows:
             print(f"{r['name']},{r['us_per_call']:.0f},\"{r['derived']}\"")
-            records.append({k: v for k, v in r.items() if k != "result"})
+            rec = {k: v for k, v in r.items() if k != "result"}
+            rec["module"] = mod_name
+            records.append(rec)
         sys.stdout.flush()
 
     os.makedirs("experiments", exist_ok=True)
@@ -168,14 +201,19 @@ def main() -> None:
     if check:
         # gate mode: compare against the recorded baseline, leave it as is.
         # A missing/corrupt baseline (or one sharing no rows with this run)
-        # must FAIL — a gate that silently compares zero rows is no gate.
+        # must FAIL — a gate that silently compares zero rows is no gate —
+        # and so must a benchmark module that errored out: its rows never
+        # reached the comparison at all.
         names = {r.get("name") for r in prior}
         comparable = [r for r in records if r.get("name") in names]
         if not comparable:
             print("# REGRESSION experiments/bench_results.json has no rows "
                   "matching this run — baseline missing or corrupt")
             raise SystemExit(1)
-        failures = check_regressions(records, prior, tolerance)
+        failures = [f"module {m} raised instead of producing rows"
+                    for m in errored]
+        failures += check_regressions(records, prior, tolerance,
+                                      ran_modules=ran_modules)
         print(f"# total wall: {time.time() - t_start:.0f}s; "
               f"--check: {len(comparable)} rows vs recorded baseline "
               f"(tolerance {tolerance:g}x)")

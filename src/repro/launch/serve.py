@@ -43,7 +43,19 @@ block/lane/horizon budgets the engine enforces (``--no-tenant-alloc``
 keeps the registry — tags, SLO scoring, slack policy — but drops the
 budgets: the capacity-proportional baseline). The summary gains a
 per-tenant block with p50/p99 latency and ``slo_attainment``; ``--verify``
-still holds — tenant mechanisms reorder, they never change tokens:
+still holds — tenant mechanisms reorder, they never change tokens.
+
+Observability (src/repro/obs): ``--trace out.jsonl`` records every
+scheduling decision, phase dispatch, and block-pool transition as
+structured events (``--trace-format chrome`` writes a Perfetto-loadable
+Chrome trace instead; ``--trace-capacity`` bounds the event ring).
+``--metrics-every N`` sets the time-series sampling cadence at decode
+boundaries. Analyze a JSONL trace offline with::
+
+    PYTHONPATH=src python -m repro.launch.trace_report out.jsonl
+
+Tracing off is the default and costs one branch per hook site, so the
+benchmarked decode numbers are unchanged:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --engine continuous --cache paged --mesh host --slots 8 --batch 12 \
@@ -228,6 +240,19 @@ def main() -> None:
                     help="top-k truncation for sampling (0 = full vocab)")
     ap.add_argument("--verify", action="store_true",
                     help="check outputs against a single-device static engine")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="dump a structured event trace of the run here "
+                         "(analyze with repro.launch.trace_report)")
+    ap.add_argument("--trace-format", default="jsonl",
+                    choices=["jsonl", "chrome"],
+                    help="trace file format: jsonl (trace_report) or chrome "
+                         "(load in ui.perfetto.dev)")
+    ap.add_argument("--trace-capacity", type=int, default=1 << 16,
+                    help="event ring-buffer capacity (oldest events drop "
+                         "beyond this)")
+    ap.add_argument("--metrics-every", type=int, default=1,
+                    help="sample the metrics time series every N decode "
+                         "boundaries (0 disables series sampling)")
     args = ap.parse_args()
 
     if args.verify and args.temperature > 0:
@@ -247,6 +272,11 @@ def main() -> None:
     if args.tenants > 0:
         registry, allocation = build_tenancy(args, reqs, n_slots)
 
+    tracer = None
+    if args.trace:
+        from repro.obs import Tracer
+        tracer = Tracer(capacity=args.trace_capacity)
+
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=n_blocks, watermark=args.watermark,
                      prefill_lanes=args.prefill_lanes,
@@ -254,7 +284,8 @@ def main() -> None:
                      temperature=args.temperature, top_k=args.top_k,
                      decode_horizon=args.decode_horizon,
                      eos_token=args.eos_token,
-                     tenants=registry, allocation=allocation)
+                     tenants=registry, allocation=allocation,
+                     tracer=tracer, metrics_every=args.metrics_every)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
@@ -265,6 +296,16 @@ def main() -> None:
                              policy=args.policy, **engine_kw)
 
     out, stats = engine.run(reqs)
+
+    trace_info = None
+    if tracer is not None:
+        if args.trace_format == "chrome":
+            from repro.obs import write_chrome_trace
+            write_chrome_trace(args.trace, tracer.events)
+        else:
+            tracer.dump_jsonl(args.trace)
+        trace_info = {"path": args.trace, "format": args.trace_format,
+                      "events": len(tracer), "dropped": tracer.dropped}
 
     record = {
         "arch": cfg.arch_id,
@@ -277,6 +318,8 @@ def main() -> None:
         **dataclasses.asdict(stats),
         "sample_output": out[0].output[:8],
     }
+    if trace_info is not None:
+        record["trace"] = trace_info
     if allocation is not None:
         record["tenant_budgets"] = {
             tid: dataclasses.asdict(s)

@@ -1,0 +1,257 @@
+"""Offline trace analyzer: reconstruct run behavior from a serve trace.
+
+    PYTHONPATH=src python -m repro.launch.trace_report out.jsonl
+
+Replays a JSONL event trace (``launch/serve.py --trace out.jsonl``) into
+the summaries the raw event stream only implies:
+
+  * **SLO-attainment timeline** — evictions bucketed over the decode-step
+    clock, per tenant: attainment per bucket, so an SLO collapse shows
+    WHEN it happened, not just that the run-level average dipped.
+  * **Per-tenant occupancy shares** — admit/evict/preempt plus the block
+    events replayed into step-weighted per-tenant cache holdings: the
+    observed analogue of the allocator's planned shares.
+  * **Preemption-cause breakdown** — victims grouped by (cause, tenant).
+  * **Dispatch summaries** — decode-horizon geometry (K, width) and
+    prefill round shapes with wall-time splits.
+  * **Queue report** — admission wait distribution plus budget_skip /
+    defer counts per tenant.
+
+Flags: ``--json`` emits the full report as one JSON object; ``--buckets``
+sets the timeline resolution; ``--validate`` checks every event against
+``EVENT_SCHEMA`` first; ``--require-slo-timeline`` exits nonzero when the
+trace yields no SLO timeline (the CI smoke-test assertion).
+
+Pure stdlib + the event schema — no jax, no device bootstrap — so it runs
+anywhere the trace file lands.
+"""
+import argparse
+import json
+import sys
+from collections import defaultdict
+
+from repro.obs import EVENT_SCHEMA, load_trace, validate_events
+
+
+def _mean(xs):
+    xs = list(xs)
+    return sum(xs) / len(xs) if xs else 0.0
+
+
+def slo_timeline(events, n_buckets: int):
+    """Evictions bucketed over the decode-step clock, per tenant.
+
+    Returns {tenant: [{"step_lo", "step_hi", "n", "met", "attainment"},
+    ...]} with one entry per non-empty bucket."""
+    evs = [e for e in events if e["ev"] == "evict"]
+    if not evs:
+        return {}
+    hi = max(e["step"] for e in evs)
+    width = max(hi / n_buckets, 1e-9)
+    by_tenant = defaultdict(lambda: defaultdict(lambda: [0, 0]))
+    for e in evs:
+        b = min(int(e["step"] / width), n_buckets - 1)
+        cell = by_tenant[e["tenant"]][b]
+        cell[0] += 1
+        cell[1] += bool(e["met"])
+    out = {}
+    for tenant, buckets in sorted(by_tenant.items()):
+        out[tenant] = [
+            {"step_lo": b * width, "step_hi": (b + 1) * width,
+             "n": n, "met": met, "attainment": met / n}
+            for b, (n, met) in sorted(buckets.items())]
+    return out
+
+
+def occupancy_shares(events):
+    """Step-weighted per-tenant cache holdings, replayed from the trace.
+
+    Admission stamps a slot's tenant and starting units (blocks for the
+    paged pool, 1 slot otherwise); block_grow adds, evict / preempt
+    releases. Each event integrates ``held * dt`` since the previous
+    event's step, so the shares weigh holdings by how LONG they were
+    held — the observed counterpart of the allocator's planned shares."""
+    slot_tenant = {}
+    slot_units = defaultdict(float)
+    acc = defaultdict(float)           # tenant -> unit-steps
+    last_step = 0.0
+
+    def advance(step):
+        nonlocal last_step
+        dt = step - last_step
+        if dt > 0:
+            for s, t in slot_tenant.items():
+                acc[t] += slot_units[s] * dt
+            last_step = step
+        elif dt < 0:
+            last_step = step
+
+    for e in events:
+        ev = e["ev"]
+        if ev not in ("admit", "evict", "preempt", "block_grow", "run_end"):
+            continue
+        advance(e["step"])
+        slot = e.get("slot")
+        if ev == "admit":
+            slot_tenant[slot] = e["tenant"]
+            slot_units[slot] = float(e["units"])
+        elif ev == "block_grow":
+            if slot in slot_tenant:
+                slot_units[slot] += float(e["blocks"])
+        elif ev in ("evict", "preempt"):
+            slot_tenant.pop(slot, None)
+            slot_units.pop(slot, None)
+    total = sum(acc.values())
+    return {t: {"unit_steps": v, "share": v / total if total else 0.0}
+            for t, v in sorted(acc.items())}
+
+
+def preemption_breakdown(events):
+    """Preemption victims grouped by (cause, tenant)."""
+    table = defaultdict(int)
+    for e in events:
+        if e["ev"] == "preempt":
+            table[(e["cause"], e["tenant"])] += 1
+    return [{"cause": c, "tenant": t, "n": n}
+            for (c, t), n in sorted(table.items())]
+
+
+def dispatch_summary(events):
+    """Decode-horizon geometry and prefill shapes, with wall splits."""
+    dec = [e for e in events if e["ev"] == "decode_horizon"]
+    pre = [e for e in events
+           if e["ev"] in ("prefill", "prefill_round")]
+    shrinks = [e for e in events if e["ev"] == "horizon_shrink"]
+    return {
+        "decode": {
+            "dispatches": len(dec),
+            "mean_k": _mean(e["k"] for e in dec),
+            "mean_width": _mean(e["width"] for e in dec),
+            "mean_active": _mean(e["active"] for e in dec),
+            "wall_s": sum(e["dur_s"] for e in dec),
+        },
+        "prefill": {
+            "dispatches": len(pre),
+            "wall_s": sum(e["dur_s"] for e in pre),
+        },
+        "horizon_shrinks": len(shrinks),
+    }
+
+
+def queue_report(events):
+    """Admission waits plus per-tenant budget_skip / defer counts."""
+    waits = defaultdict(list)
+    skips = defaultdict(int)
+    defers = defaultdict(int)
+    for e in events:
+        if e["ev"] == "admit":
+            waits[e["tenant"]].append(e["wait_steps"])
+        elif e["ev"] == "budget_skip":
+            skips[e["tenant"]] += 1
+        elif e["ev"] == "defer":
+            defers[e["tenant"]] += 1
+    return {t: {"admitted": len(w), "mean_wait_steps": _mean(w),
+                "max_wait_steps": max(w) if w else 0.0,
+                "budget_skips": skips.get(t, 0), "defers": defers.get(t, 0)}
+            for t, w in sorted(waits.items())}
+
+
+def build_report(events, n_buckets: int = 8) -> dict:
+    """The full analyzer output as one JSON-able dict."""
+    meta = next((e for e in events if e["ev"] == "trace_meta"), None)
+    run = next((e for e in events if e["ev"] == "run_start"), None)
+    end = next((e for e in events if e["ev"] == "run_end"), None)
+    body = [e for e in events if e["ev"] != "trace_meta"]
+    return {
+        "meta": {k: meta[k] for k in ("events", "dropped", "capacity")}
+        if meta else None,
+        "run": ({k: run[k] for k in sorted(EVENT_SCHEMA["run_start"])}
+                if run else None),
+        "steps": end["steps"] if end else None,
+        "wall_s": end["wall_s"] if end else None,
+        "slo_timeline": slo_timeline(body, n_buckets),
+        "occupancy_shares": occupancy_shares(body),
+        "preemptions": preemption_breakdown(body),
+        "dispatches": dispatch_summary(body),
+        "queue": queue_report(body),
+    }
+
+
+def _print_human(report: dict) -> None:
+    run = report["run"] or {}
+    print(f"run: backend={run.get('backend')} slots={run.get('n_slots')} "
+          f"horizon={run.get('horizon')} requests={run.get('n_requests')} "
+          f"steps={report['steps']} wall_s={report['wall_s'] or 0:.3f}")
+    if report["meta"]:
+        m = report["meta"]
+        print(f"trace: {m['events']} events, {m['dropped']} dropped "
+              f"(capacity {m['capacity']})")
+    d = report["dispatches"]
+    print(f"decode: {d['decode']['dispatches']} dispatches, "
+          f"mean K {d['decode']['mean_k']:.1f}, "
+          f"mean width {d['decode']['mean_width']:.1f}, "
+          f"{d['decode']['wall_s']:.3f}s; "
+          f"prefill: {d['prefill']['dispatches']} dispatches, "
+          f"{d['prefill']['wall_s']:.3f}s; "
+          f"{d['horizon_shrinks']} horizon shrinks")
+    print("\noccupancy shares (step-weighted):")
+    for t, s in report["occupancy_shares"].items():
+        print(f"  {t:<10} {s['share']*100:5.1f}%  "
+              f"({s['unit_steps']:.0f} unit-steps)")
+    print("\nqueue:")
+    for t, q in report["queue"].items():
+        print(f"  {t:<10} admitted={q['admitted']} "
+              f"mean_wait={q['mean_wait_steps']:.1f} "
+              f"max_wait={q['max_wait_steps']:.0f} "
+              f"budget_skips={q['budget_skips']} defers={q['defers']}")
+    if report["preemptions"]:
+        print("\npreemptions:")
+        for row in report["preemptions"]:
+            print(f"  {row['cause']:<16} {row['tenant']:<10} x{row['n']}")
+    print("\nSLO timeline:")
+    if not report["slo_timeline"]:
+        print("  (no evictions in trace)")
+    for t, buckets in report["slo_timeline"].items():
+        cells = " ".join(
+            f"[{b['step_lo']:.0f}-{b['step_hi']:.0f}) "
+            f"{b['met']}/{b['n']}" for b in buckets)
+        att = _mean(b["attainment"] for b in buckets)
+        print(f"  {t:<10} {cells}  (mean bucket attainment {att:.2f})")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="analyze a serve trace (launch/serve.py --trace)")
+    ap.add_argument("trace", help="JSONL trace path")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the full report as JSON")
+    ap.add_argument("--buckets", type=int, default=8,
+                    help="SLO-timeline resolution (step buckets)")
+    ap.add_argument("--validate", action="store_true",
+                    help="check every event against EVENT_SCHEMA first")
+    ap.add_argument("--require-slo-timeline", action="store_true",
+                    help="exit nonzero when the trace has no evictions "
+                         "(CI smoke assertion)")
+    args = ap.parse_args(argv)
+
+    events = load_trace(args.trace)
+    if args.validate:
+        problems = validate_events(events)
+        if problems:
+            for p in problems[:20]:
+                print(f"schema violation: {p}", file=sys.stderr)
+            return 2
+    report = build_report(events, n_buckets=args.buckets)
+    if args.json:
+        print(json.dumps(report, indent=2))
+    else:
+        _print_human(report)
+    if args.require_slo_timeline and not report["slo_timeline"]:
+        print("FAIL: trace produced no SLO timeline (no evict events)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Observability: structured event tracing + live metrics for the serve
+engine.
+
+Three pieces (see serve/README.md "Observability" for the taxonomy and a
+worked example):
+
+  * ``obs.events``  — ring-buffered JSONL event tracer (``Tracer``), the
+    event taxonomy (``EVENT_SCHEMA``), and the falsy no-op ``NullTracer``
+    the engine holds when tracing is off.
+  * ``obs.metrics`` — counters / gauges / histograms + boundary-sampled
+    time series (``MetricsRegistry``); always on — ``ServeStats`` is
+    built from it.
+  * ``obs.chrome``  — Chrome trace-event (Perfetto-viewable) export.
+
+``launch/trace_report.py`` is the offline analyzer over dumped traces.
+"""
+from repro.obs.chrome import to_chrome_trace, write_chrome_trace
+from repro.obs.events import (EVENT_SCHEMA, NULL_TRACER, SPAN_EVENTS,
+                              NullTracer, Tracer, load_trace,
+                              validate_events)
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               RunObs)
+
+__all__ = [
+    "Counter", "EVENT_SCHEMA", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL_TRACER", "NullTracer", "RunObs", "SPAN_EVENTS", "Tracer",
+    "load_trace", "to_chrome_trace", "validate_events", "write_chrome_trace",
+]

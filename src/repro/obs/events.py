@@ -1,0 +1,178 @@
+"""Structured event tracing: a ring-buffered event log for the serve engine.
+
+The telemetry substrate Synergy-style scheduling needs: decisions must be
+*observed*, not assumed (the same argument PAPER.md makes for per-job
+resource sensitivity), and event-level traces are what make utilization and
+queueing pathologies diagnosable at all (Jeon et al., arXiv:1901.05758).
+
+An event is one flat dict:
+
+    {"ev": <type>, "step": <engine decode-step clock>,
+     "t": <wall seconds since tracer start>, ...payload}
+
+``EVENT_SCHEMA`` is the taxonomy — every type's exact payload field set.
+The schema is a stability contract: ``tests/test_obs.py`` pins it with a
+golden trace, and ``launch/trace_report.py`` replays traces against it, so
+adding a field means extending the schema (append-only), never mutating an
+existing type in place.
+
+``Tracer`` is a bounded ring: events past ``capacity`` drop the OLDEST
+entry (``dropped`` counts them) so a long run's tail — usually what you
+are debugging — survives at a fixed memory cost. ``NullTracer`` is the
+tracing-off stand-in: it is falsy and its hooks do nothing, so every
+instrumentation site in the engine guards with a single truthiness check
+(``if tr: tr.emit(...)``) and tracing off costs one branch per site.
+"""
+from __future__ import annotations
+
+import json
+import time
+from collections import deque
+from typing import Dict, FrozenSet, List, Optional
+
+#: event taxonomy: type -> exact payload field set (beyond ev/step/t).
+#: Span events additionally carry ``dur_s`` (listed explicitly). The
+#: golden-trace test asserts emitted events match these sets EXACTLY, so
+#: schema drift is a deliberate, reviewed change.
+EVENT_SCHEMA: Dict[str, FrozenSet[str]] = {
+    # -- run lifecycle ------------------------------------------------------
+    "run_start": frozenset({"backend", "n_slots", "horizon", "n_requests"}),
+    "run_end": frozenset({"steps", "wall_s"}),
+    # -- scheduler decisions ------------------------------------------------
+    "admit": frozenset({"req", "tenant", "slot", "prompt_len", "max_new",
+                        "wait_steps", "units"}),
+    "evict": frozenset({"req", "tenant", "slot", "latency_steps",
+                        "finished_early", "slo_steps", "met"}),
+    "preempt": frozenset({"req", "tenant", "slot", "cause", "n_preempted"}),
+    "budget_skip": frozenset({"req", "tenant", "held", "need", "budget"}),
+    "defer": frozenset({"req", "tenant", "cause"}),
+    # -- phase dispatches (spans: carry dur_s) ------------------------------
+    "prefill": frozenset({"req", "tenant", "slot", "prompt_len", "dur_s"}),
+    "prefill_round": frozenset({"lanes", "width", "dur_s"}),
+    "decode_horizon": frozenset({"k", "width", "active", "full", "dur_s"}),
+    "horizon_shrink": frozenset({"from_k", "to_k", "cause"}),
+    # -- block pool ---------------------------------------------------------
+    "block_alloc": frozenset({"slot", "blocks", "hits"}),
+    "block_grow": frozenset({"slot", "blocks"}),
+    "block_free": frozenset({"slot", "blocks", "shared"}),
+    "prefix_evict": frozenset({"blocks"}),
+    # -- metadata (first line of a dumped trace) ----------------------------
+    "trace_meta": frozenset({"events", "dropped", "capacity"}),
+}
+
+#: span types: rendered as duration tracks by the Chrome exporter
+SPAN_EVENTS = frozenset({"prefill", "prefill_round", "decode_horizon"})
+
+
+class NullTracer:
+    """The tracing-off tracer: falsy, every hook a no-op.
+
+    The engine's default — ``if tr:`` short-circuits every instrumentation
+    site, so a run without tracing pays one truthiness check per site and
+    nothing else (the no-measurable-overhead contract ``benchmarks.run
+    --check`` gates).
+    """
+    enabled = False
+    step: float = 0.0
+    dropped = 0
+    events: List[dict] = []
+
+    def __bool__(self) -> bool:
+        return False
+
+    def emit(self, ev: str, step: Optional[float] = None, **fields) -> None:
+        pass
+
+
+NULL_TRACER = NullTracer()
+
+
+class Tracer:
+    """Ring-buffered structured event log.
+
+    ``capacity`` bounds memory: once full, each new event drops the OLDEST
+    one and bumps ``dropped``. ``step`` is the engine's decode-step clock —
+    the engine advances it, so call sites that have no clock of their own
+    (the block pool) inherit the current step. Wall time is
+    ``time.perf_counter`` relative to tracer construction (monotonic,
+    sub-microsecond).
+    """
+    enabled = True
+
+    def __init__(self, capacity: int = 1 << 16):
+        if capacity < 1:
+            raise ValueError("tracer capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._events: deque = deque()
+        self.dropped = 0
+        self.step: float = 0.0
+        self._t0 = time.perf_counter()
+
+    def __bool__(self) -> bool:
+        return True
+
+    def __len__(self) -> int:
+        return len(self._events)
+
+    def emit(self, ev: str, step: Optional[float] = None, **fields) -> None:
+        """Append one event (dropping the oldest when the ring is full)."""
+        if len(self._events) >= self.capacity:
+            self._events.popleft()
+            self.dropped += 1
+        e = {"ev": ev,
+             "step": float(self.step if step is None else step),
+             "t": time.perf_counter() - self._t0}
+        e.update(fields)
+        self._events.append(e)
+
+    @property
+    def events(self) -> List[dict]:
+        return list(self._events)
+
+    def dump_jsonl(self, path: str) -> None:
+        """Write the trace as JSONL: a ``trace_meta`` header line (event
+        count, drops, capacity) followed by one event per line."""
+        with open(path, "w") as f:
+            f.write(json.dumps({"ev": "trace_meta", "step": 0.0, "t": 0.0,
+                                "events": len(self._events),
+                                "dropped": self.dropped,
+                                "capacity": self.capacity}) + "\n")
+            for e in self._events:
+                f.write(json.dumps(e) + "\n")
+
+
+def load_trace(path: str) -> List[dict]:
+    """Read a JSONL trace back into a list of event dicts (the
+    ``trace_meta`` header, when present, stays at index 0)."""
+    events = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                events.append(json.loads(line))
+    return events
+
+
+def validate_events(events, schema: Dict[str, FrozenSet[str]] = EVENT_SCHEMA,
+                    ) -> List[str]:
+    """Schema check: every event's type must be known and its payload field
+    set must match the schema EXACTLY. Returns human-readable violations
+    (empty = conformant) — the golden-trace test and ``trace_report
+    --validate`` both run this."""
+    problems = []
+    for i, e in enumerate(events):
+        ev = e.get("ev")
+        if ev not in schema:
+            problems.append(f"event {i}: unknown type {ev!r}")
+            continue
+        missing = {"ev", "step", "t"} - set(e)
+        if missing:
+            problems.append(f"event {i} ({ev}): missing base fields "
+                            f"{sorted(missing)}")
+        payload = frozenset(set(e) - {"ev", "step", "t"})
+        if payload != schema[ev]:
+            extra = sorted(payload - schema[ev])
+            absent = sorted(schema[ev] - payload)
+            problems.append(f"event {i} ({ev}): payload mismatch "
+                            f"(extra={extra}, missing={absent})")
+    return problems

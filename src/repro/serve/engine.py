@@ -85,6 +85,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
+from repro.obs import NULL_TRACER, RunObs
 from repro.serve.cache import CachePool
 from repro.serve.paged import BlockManager
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
@@ -169,6 +170,11 @@ class ServeStats:
     prefix_blocks_total: int = 0      # prompt blocks allocated (paged)
     prefix_blocks_hit: int = 0        # of those, served from the cache
     prefix_hit_rate: float = 0.0
+    # -- boundary-sampled series (obs.MetricsRegistry; live with tracing off) --
+    mean_queue_depth: float = 0.0     # waiting requests at horizon boundaries
+    max_queue_depth: int = 0
+    mean_occupancy: float = 0.0       # pool occupancy at horizon boundaries
+    max_occupancy: float = 0.0        # (paged: used blocks; contig: slots)
 
 
 @dataclass
@@ -290,6 +296,16 @@ class ServeEngine:
     is ordering/allocation only — per-request outputs stay token-identical
     to the single-tenant engine (the exactness invariant ``--verify``
     checks end to end).
+
+    ``tracer`` (an ``obs.Tracer``) turns on structured event tracing:
+    admissions, evictions, preemptions (with cause), prefill rounds,
+    decode-horizon dispatches, and block-pool traffic land in the ring
+    buffer (see ``obs.EVENT_SCHEMA``). Tracing never touches computation —
+    outputs are identical with it on or off — and with it off every hook
+    is a single falsy check. A per-run ``obs.MetricsRegistry`` is always
+    live regardless: counters/gauges sampled every ``metrics_every``
+    horizon boundaries feed ``ServeStats`` and its queue-depth/occupancy
+    summaries.
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
@@ -302,7 +318,8 @@ class ServeEngine:
                  prefix_cache: bool = True, decode_horizon: int = 8,
                  eos_token: Optional[int] = None,
                  tenants: Optional[TenantRegistry] = None,
-                 allocation: Optional[TenantAllocation] = None):
+                 allocation: Optional[TenantAllocation] = None,
+                 tracer=None, metrics_every: int = 1):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -330,6 +347,13 @@ class ServeEngine:
         self.eos_token = None if eos_token is None else int(eos_token)
         self.tenants = tenants
         self.allocation = allocation
+        #: event tracer (obs.Tracer) — defaults to the falsy NullTracer, so
+        #: every hook below is one truthiness check when tracing is off.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        #: sample the metrics gauges into time series every N decode
+        #: boundaries (0 disables the series; the gauges still update, so
+        #: the stats' queue/occupancy summaries survive via the fallback).
+        self.metrics_every = max(int(metrics_every), 0)
         if policy == "slo" and tenants is None:
             raise ValueError("policy='slo' needs a TenantRegistry "
                              "(tenants=...) to compute slack")
@@ -438,7 +462,7 @@ class ServeEngine:
         ids = self._pick(logits, jnp.asarray(np.asarray(slots, np.int32)),
                          jnp.int32(step))
         if c is not None:
-            c["host_syncs"] += 1
+            c.inc("host_syncs")
         return np.asarray(ids, np.int32)
 
     # -- decode horizons -------------------------------------------------------
@@ -562,15 +586,23 @@ class ServeEngine:
         """Serve ``requests`` to completion; returns (requests, stats)."""
         reqs = list(requests)
         n_slots = self.n_slots if self.n_slots else max(len(reqs), 1)
+        c = RunObs(self.tracer)
+        tr = c.tracer
+        if tr:
+            tr.step = 0.0
+            tr.emit("run_start", backend=self.cache_kind, n_slots=n_slots,
+                    horizon=self.decode_horizon, n_requests=len(reqs))
         t0 = time.perf_counter()
         with self._rules():
             if self.cache_kind == "paged":
-                counters = self._run_paged(reqs, n_slots)
+                self._run_paged(reqs, n_slots, c)
             else:
-                counters = self._run_contiguous(reqs, n_slots)
+                self._run_contiguous(reqs, n_slots, c)
 
         wall = time.perf_counter() - t0
-        return reqs, self._stats(reqs, counters, n_slots, wall)
+        if tr:
+            tr.emit("run_end", steps=c.value("steps"), wall_s=wall)
+        return reqs, self._stats(reqs, c, n_slots, wall)
 
     # -- stats aggregation -----------------------------------------------------
     def _finished(self, r: ServeRequest) -> bool:
@@ -627,52 +659,82 @@ class ServeEngine:
             }
         return out
 
-    def _stats(self, reqs, counters, n_slots, wall) -> ServeStats:
+    def _stats(self, reqs, c: RunObs, n_slots, wall) -> ServeStats:
+        """Fold the run's metrics registry (plus the per-request latency
+        stamps, which stay authoritative) into a ``ServeStats``."""
+        m = c.metrics
         new_tokens = sum(len(r.output) for r in reqs)
         lat_steps = [r.latency_steps for r in reqs
                      if r.latency_steps is not None]
         lat_wall = [r.latency_s for r in reqs if r.latency_s is not None]
-        steps = counters["steps"]
+        steps = int(m.value("steps"))
         rows_possible = steps * n_slots
-        hit, total = counters["prefix_hits"], counters["prefix_total"]
+        hit, total = int(m.value("prefix_hits")), int(m.value("prefix_total"))
         met = sum(1 for r in reqs if self._meets_slo(r))
+        qd_mean, qd_max = m.series_stats("queue_depth")
+        occ_mean, occ_max = m.series_stats("occupancy")
         stats = ServeStats(
             n_requests=len(reqs),
             new_tokens=new_tokens,
             steps=steps,
             wall_s=wall,
             tokens_per_s=new_tokens / wall if wall > 0 else 0.0,
-            slot_utilization=counters["util_acc"] / steps if steps else 0.0,
+            slot_utilization=m.value("util_acc") / steps if steps else 0.0,
             mean_latency_steps=float(np.mean(lat_steps)) if lat_steps else 0.0,
             p95_latency_steps=(float(np.percentile(lat_steps, 95))
                                if lat_steps else 0.0),
             mean_latency_s=float(np.mean(lat_wall)) if lat_wall else 0.0,
-            max_active=counters["max_active"],
-            decode_rows_saved=(1.0 - counters["rows_decoded"] / rows_possible
+            max_active=int(m.value("max_active")),
+            decode_rows_saved=(1.0 - m.value("rows_decoded") / rows_possible
                                if rows_possible else 0.0),
-            preemptions=counters["preemptions"],
-            block_report=counters["block_report"],
-            prefill_s=counters["prefill_s"],
-            decode_s=counters["decode_s"],
-            prefill_dispatches=counters["prefill_dispatches"],
-            decode_dispatches=counters["decode_dispatches"],
+            preemptions=int(m.value("preemptions")),
+            block_report=c.block_report,
+            prefill_s=m.value("prefill_s"),
+            decode_s=m.value("decode_s"),
+            prefill_dispatches=int(m.value("prefill_dispatches")),
+            decode_dispatches=int(m.value("decode_dispatches")),
             decode_horizon=self.decode_horizon,
-            host_syncs=counters["host_syncs"],
+            host_syncs=int(m.value("host_syncs")),
             prefix_blocks_total=total,
             prefix_blocks_hit=hit,
             prefix_hit_rate=hit / total if total else 0.0,
             unfinished=sum(1 for r in reqs if not self._finished(r)),
             slo_attainment=met / len(reqs) if reqs else 1.0,
             tenants=self._tenant_stats(reqs),
+            mean_queue_depth=qd_mean,
+            max_queue_depth=int(qd_max),
+            mean_occupancy=occ_mean,
+            max_occupancy=occ_max,
         )
         return stats
 
-    @staticmethod
-    def _counters() -> dict:
-        return dict(steps=0, util_acc=0.0, max_active=0, rows_decoded=0,
-                    preemptions=0, block_report=None, prefill_s=0.0,
-                    decode_s=0.0, prefill_dispatches=0, decode_dispatches=0,
-                    host_syncs=0, prefix_hits=0, prefix_total=0)
+    def _sample_boundary(self, sched, pool, c: RunObs, n_slots: int) -> None:
+        """Update the live gauges after a decode boundary and, every
+        ``metrics_every`` boundaries, snapshot them (and every counter)
+        into the registry's time series — the substrate for the stats'
+        queue/occupancy summaries and ``trace_report``'s timelines. Always
+        on: a handful of float stores per horizon (not per token)."""
+        m = c.metrics
+        c.boundaries += 1
+        m.set("queue_depth", len(sched.waiting))
+        m.set("active", len(sched.active))
+        if self.cache_kind == "paged":
+            occ = (1.0 - pool.free_blocks / pool.n_blocks
+                   if pool.n_blocks else 0.0)
+        else:
+            occ = len(sched.active) / n_slots if n_slots else 0.0
+        m.set("occupancy", occ)
+        every = self.metrics_every
+        if every and c.boundaries % every == 0:
+            if self.tenants is not None:
+                live = list(sched.waiting) + list(sched.active.values())
+                for t in self.tenants:
+                    slk = min((self._slack(r, sched.step) for r in live
+                               if r.tenant == t.tenant_id),
+                              default=math.inf)
+                    if math.isfinite(slk):
+                        m.set(f"slack[{t.tenant_id}]", slk)
+            m.sample(sched.step)
 
     # -- horizon scheduling helpers (host side) --------------------------------
     def _make_sched(self, pool) -> ContinuousScheduler:
@@ -681,7 +743,8 @@ class ServeEngine:
         per-tenant budget check when an allocation is installed."""
         policy = (SLOSlack(self.tenants) if self.policy == "slo"
                   else self.policy)
-        return ContinuousScheduler(pool, policy, allocation=self.allocation)
+        return ContinuousScheduler(pool, policy, allocation=self.allocation,
+                                   tracer=self.tracer)
 
     def _slack(self, req, step) -> float:
         """SLO slack in decode steps (+inf without a registry or SLO)."""
@@ -689,13 +752,25 @@ class ServeEngine:
             return math.inf
         return self.tenants.slack(req, step)
 
-    def _evict(self, sched, state: _DecodeState):
+    def _evict(self, sched, state: _DecodeState, c: Optional[RunObs] = None):
         """Evict finished requests and freeze their device rows, so a
         vacated slot gathered as horizon padding can never decode as live
         (or, paged, write KV through a stale block table)."""
         done_slots = [s for s, r in sched.active.items() if r.done]
         out = sched.evict_finished()
         state.freeze(done_slots)
+        if c is not None and out:
+            for slot, r in zip(done_slots, out):
+                c.metrics.observe("latency_steps", r.latency_steps)
+                if c.tracer:
+                    t = (self.tenants.get(r.tenant)
+                         if self.tenants is not None else None)
+                    c.tracer.emit(
+                        "evict", req=r.job_id, tenant=r.tenant, slot=slot,
+                        latency_steps=r.latency_steps,
+                        finished_early=r.finished_early,
+                        slo_steps=t.slo_steps if t is not None else None,
+                        met=self._meets_slo(r))
         return out
 
     def _could_admit_arrival(self, sched) -> bool:
@@ -769,15 +844,24 @@ class ServeEngine:
         t0 = time.perf_counter()
         pool.buffers, state.tok, state.pos, state.stop, blk = self._horizon(
             *args, jnp.asarray(idx), jnp.int32(sched.step), h=h, full=full)
-        c["decode_dispatches"] += 1
+        c.inc("decode_dispatches")
         blk = np.asarray(blk)                # the ONE [W, h] int32 fetch
-        c["host_syncs"] += 1
-        c["decode_s"] += time.perf_counter() - t0
+        c.inc("host_syncs")
+        dt = time.perf_counter() - t0
+        c.inc("decode_s", dt)
         counts = self._unpack_horizon(sched, act, rows, blk, h, n_slots, c)
-        c["rows_decoded"] += len(idx) * h
-        c["max_active"] = max(c["max_active"], len(act))
-        c["steps"] += h
+        c.inc("rows_decoded", len(idx) * h)
+        c.hi("max_active", len(act))
+        c.inc("steps", h)
+        c.metrics.observe("horizon_k", h)
+        if c.tracer:
+            c.tracer.emit("decode_horizon", step=sched.step, k=h,
+                          width=len(idx), active=len(act), full=full,
+                          dur_s=dt)
         sched.step += h
+        if c.tracer:
+            c.tracer.step = sched.step
+        self._sample_boundary(sched, pool, c, n_slots)
         return counts
 
     def _unpack_horizon(self, sched, act, rows, blk, h, n_slots,
@@ -803,10 +887,10 @@ class ServeEngine:
                 # boundary): last token emitted at step0 + count - 1.
                 r.finished_at = float(step0 + len(toks))
         for k in range(h):
-            c["util_acc"] += sum(1 for m in counts if m > k) / n_slots
+            c.inc("util_acc", sum(1 for m in counts if m > k) / n_slots)
         return counts
 
-    def _run_contiguous(self, reqs, n_slots):
+    def _run_contiguous(self, reqs, n_slots, c: RunObs):
         pool = CachePool(self.model, n_slots, self.max_len)
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
@@ -817,39 +901,46 @@ class ServeEngine:
             sched.submit(r)
 
         state = _DecodeState(n_slots, sharding=self.sharding)
-        c = self._counters()
+        tr = c.tracer
         dmult = (self.sharding.axis_size("data")
                  if self.sharding is not None else 1)
 
         while sched.has_work:
-            self._evict(sched, state)
+            self._evict(sched, state, c)
             sched.admit()
             admitted = sched.drain_prefill()
             t0 = time.perf_counter()
             for r in admitted:
+                rt0 = time.perf_counter() if tr else 0.0
                 tokens = jnp.asarray(
                     np.asarray(r.prompt, np.int32))[None, :]
                 logits, row = self._prefill(self.params, tokens)
-                c["prefill_dispatches"] += 1
+                c.inc("prefill_dispatches")
                 pool.write(r.slot, row)
                 tok = int(self._select_tokens(logits[:, -1], [r.slot],
                                               ~sched.step, c)[0])
                 r.output.append(tok)
                 if self.eos_token is not None and tok == self.eos_token:
                     r.finished_early = True
+                if tr:
+                    tr.emit("prefill", req=r.job_id, tenant=r.tenant,
+                            slot=r.slot, prompt_len=len(r.prompt),
+                            dur_s=time.perf_counter() - rt0)
             if admitted:
-                c["prefill_s"] += time.perf_counter() - t0
+                c.inc("prefill_s", time.perf_counter() - t0)
                 state.set_rows(
                     [r.slot for r in admitted],
                     [r.output[-1] for r in admitted],
                     [len(r.prompt) for r in admitted],
                     [len(r.prompt) + r.max_new_tokens - 1 for r in admitted])
-            self._evict(sched, state)    # satisfied by prefill alone / EOS
+            self._evict(sched, state, c)  # satisfied by prefill alone / EOS
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
                 sched.step = max(sched.step + 1, int(math.ceil(nxt)))
+                if tr:
+                    tr.step = sched.step
                 continue
 
             # pool.write's eager scatter loses the NamedSharding layout;
@@ -861,8 +952,7 @@ class ServeEngine:
 
             h = self._pick_h(sched, sorted(sched.active))
             self._decode_boundary(sched, pool, state, c, n_slots, dmult, h)
-        self._evict(sched, state)
-        return c
+        self._evict(sched, state, c)
 
     # -- paged loop --------------------------------------------------------------
     def _next_lane_req(self, queue: deque, lanes) -> ServeRequest:
@@ -888,7 +978,7 @@ class ServeEngine:
         return queue.popleft()
 
     def _batched_paged_prefill(self, pool: BlockManager, reqs, step: int,
-                               c: dict) -> None:
+                               c: RunObs) -> None:
         """Prefill all joining requests through up to ``prefill_lanes``
         lanes in lockstep chunk-rounds: one jitted ``[P, block_size]``
         dispatch per round covers one chunk of every live lane. A lane
@@ -907,6 +997,7 @@ class ServeEngine:
             from repro.models.moe import capacity as moe_capacity
         queue = deque(reqs)
         lanes: List[_PrefillLane] = []
+        tr = c.tracer
         while queue or lanes:
             while queue and len(lanes) < self.prefill_lanes:
                 r = self._next_lane_req(queue, lanes)
@@ -935,11 +1026,15 @@ class ServeEngine:
                 cols = [ln.state for ln in lanes]
                 cols += [np.zeros_like(cols[0])] * (w - len(lanes))
                 state = jnp.asarray(np.concatenate(cols, axis=1))
+            rt0 = time.perf_counter() if tr else 0.0
             logits, pool.buffers, new_state = self._prefill(
                 self.params, pool.buffers, jnp.asarray(tokens),
                 jnp.asarray(starts), jnp.asarray(nv), jnp.asarray(tables),
                 state, jnp.asarray(caps), cap=cap_static)
-            c["prefill_dispatches"] += 1
+            c.inc("prefill_dispatches")
+            if tr:
+                tr.emit("prefill_round", lanes=len(lanes), width=w,
+                        dur_s=time.perf_counter() - rt0)
             if new_state is not None:
                 new_state = np.asarray(new_state)
             done_idx: List[int] = []
@@ -976,7 +1071,7 @@ class ServeEngine:
         return need
 
     def _ensure_growth(self, sched, pool: BlockManager, pos_np, stop_np,
-                       h: int):
+                       h: int, c: RunObs):
         """Guarantee blocks for up to ``h`` decode tokens per active row
         before a horizon dispatch (the host cannot intervene mid-horizon).
         Shrinks the horizon toward 1 before resorting to preemption — a
@@ -985,10 +1080,15 @@ class ServeEngine:
         only while even one step cannot be covered.
         Returns (h, n_preempted, victim_slots)."""
         victims = []
+        tr = c.tracer
         while True:
+            h0 = h
             while h > 1 and (self._growth_blocks_needed(
                     sched, pool, pos_np, stop_np, h) > pool.free_blocks):
                 h = max(1, h // 2)
+            if tr and h < h0:
+                tr.emit("horizon_shrink", from_k=h0, to_k=h,
+                        cause="pool_pressure")
             blocked = next(
                 (s for s in sorted(sched.active)
                  if not pool.ensure(s, min(int(pos_np[s]) + h,
@@ -1012,14 +1112,15 @@ class ServeEngine:
                 victim = max(sched.active.values(),
                              key=lambda r: (r.admitted_at, r.slot))
             victims.append(victim.slot)
-            sched.preempt(victim)
+            sched.preempt(victim, cause="pool_pressure")
 
-    def _run_paged(self, reqs, n_slots):
+    def _run_paged(self, reqs, n_slots, c: RunObs):
         pool = BlockManager(self.model, n_slots, self.max_len,
                             block_size=self.block_size,
                             n_blocks=self.n_blocks,
                             watermark=self.watermark,
-                            prefix_cache=self.prefix_cache)
+                            prefix_cache=self.prefix_cache,
+                            tracer=self.tracer)
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
@@ -1037,19 +1138,19 @@ class ServeEngine:
                              sharding=self.sharding)
         pos_np = np.zeros((n_slots,), np.int64)
         stop_np = np.zeros((n_slots,), np.int64)
-        c = self._counters()
+        tr = c.tracer
         peak_report = pool.report()
         dmult = (self.sharding.axis_size("data")
                  if self.sharding is not None else 1)
 
         while sched.has_work:
-            self._evict(sched, state)
+            self._evict(sched, state, c)
             sched.admit()
             admitted = sched.drain_prefill()
             if admitted:
                 t0 = time.perf_counter()
                 self._batched_paged_prefill(pool, admitted, sched.step, c)
-                c["prefill_s"] += time.perf_counter() - t0
+                c.inc("prefill_s", time.perf_counter() - t0)
                 for r in admitted:
                     pos_np[r.slot] = len(r.prompt)
                     stop_np[r.slot] = len(r.prompt) + r.max_new_tokens - 1
@@ -1065,7 +1166,7 @@ class ServeEngine:
                                          # prefill-only (max_new == 1 runs)
                 if snap["used_blocks"] >= peak_report["used_blocks"]:
                     peak_report = snap
-            self._evict(sched, state)    # satisfied by prefill alone / EOS
+            self._evict(sched, state, c)  # satisfied by prefill alone / EOS
             if not sched.active:
                 nxt = sched.next_arrival()
                 if nxt is None:
@@ -1075,6 +1176,8 @@ class ServeEngine:
                         "paged KV pool cannot admit any waiting request; "
                         "grow n_blocks or lower the watermark")
                 sched.step = max(sched.step + 1, int(math.ceil(nxt)))
+                if tr:
+                    tr.step = sched.step
                 continue
 
             if self.sharding is not None and admitted:
@@ -1083,8 +1186,8 @@ class ServeEngine:
 
             h = self._pick_h(sched, sorted(sched.active))
             h, n_pre, victims = self._ensure_growth(sched, pool, pos_np,
-                                                    stop_np, h)
-            c["preemptions"] += n_pre
+                                                    stop_np, h, c)
+            c.inc("preemptions", n_pre)
             state.freeze(victims)
             # delta-sync the device table mirror: only rows dirtied by
             # admission / growth (freed rows stay stale — they are frozen
@@ -1101,11 +1204,10 @@ class ServeEngine:
             snap = pool.report()
             if snap["used_blocks"] >= peak_report["used_blocks"]:
                 peak_report = snap          # report the pool at peak pressure
-        self._evict(sched, state)
-        c["block_report"] = peak_report
-        c["prefix_hits"] = pool.prefix_blocks_hit
-        c["prefix_total"] = pool.prefix_blocks_total
-        return c
+        self._evict(sched, state, c)
+        c.block_report = peak_report
+        c.inc("prefix_hits", pool.prefix_blocks_hit)
+        c.inc("prefix_total", pool.prefix_blocks_total)
 
     def generate(self, requests: List[ServeRequest]) -> List[ServeRequest]:
         """Run a batch of requests to completion; returns them."""

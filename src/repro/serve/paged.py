@@ -46,6 +46,8 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.obs import NULL_TRACER
+
 
 @dataclass
 class _PrefixEntry:
@@ -76,12 +78,16 @@ class BlockManager:
     def __init__(self, model, n_slots: int, max_len: int,
                  block_size: int = 16, n_blocks: Optional[int] = None,
                  watermark: float = 0.05, dtype=None,
-                 prefix_cache: bool = False):
+                 prefix_cache: bool = False, tracer=NULL_TRACER):
         if model.init_paged_cache is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no paged decode cache "
                 "(recurrent state is O(1); use the contiguous CachePool)")
         self.model = model
+        #: obs.Tracer for block-pool events (alloc / grow / free /
+        #: prefix_evict); the engine's clock is inherited via ``tracer.step``.
+        #: The falsy NULL_TRACER default keeps every emission one branch.
+        self.tracer = tracer if tracer is not None else NULL_TRACER
         self.n_slots = n_slots
         self.max_len = max_len
         self.block_size = block_size
@@ -173,6 +179,8 @@ class BlockManager:
         if self._free_blocks:
             return self._free_blocks.popleft()
         h, _ = self._evictable.popitem(last=False)
+        if self.tracer:
+            self.tracer.emit("prefix_evict", blocks=1)
         return self._entries.pop(h).block
 
     # -- admission -----------------------------------------------------------
@@ -288,6 +296,9 @@ class BlockManager:
                                   if hits else None)
             self.prefix_blocks_total += need
             self.prefix_blocks_hit += hits
+        if self.tracer:
+            self.tracer.emit("block_alloc", slot=slot, blocks=need - hits,
+                             hits=hits)
         return slot
 
     # -- prefix-cache surface (engine prefill hooks) --------------------------
@@ -323,13 +334,15 @@ class BlockManager:
         prefix block (the copy-on-write discipline)."""
         if slot not in self._in_use:
             raise ValueError(f"slot {slot} is not allocated")
-        have = int((self.tables[slot] >= 0).sum())
+        have = have0 = int((self.tables[slot] >= 0).sum())
         while have * self.block_size < n_tokens:
             if not self._free_blocks and not self._evictable:
                 return False
             self.tables[slot, have] = self._take_block()
             self._dirty_slots.add(slot)
             have += 1
+        if self.tracer and have > have0:
+            self.tracer.emit("block_grow", slot=slot, blocks=have - have0)
         self._lengths[slot] = max(self._lengths[slot], n_tokens)
         return True
 
@@ -352,13 +365,16 @@ class BlockManager:
             raise ValueError(f"slot {slot} is not allocated")
         self._in_use.remove(slot)
         chain = self._chains.pop(slot, ())
+        n_freed = n_shared = 0
         for j in range(self.max_blocks):
             blk = int(self.tables[slot, j])
             if blk < 0:
                 continue
+            n_freed += 1
             h = chain[j][0] if j < len(chain) else None
             e = self._entries.get(h) if h is not None else None
             if e is not None and e.block == blk:
+                n_shared += 1
                 e.refs -= 1
                 if e.refs == 0:
                     if e.ready:
@@ -374,6 +390,9 @@ class BlockManager:
         self._cached_tokens[slot] = 0
         self._resume.pop(slot, None)
         self._free_slots.append(slot)
+        if self.tracer:
+            self.tracer.emit("block_free", slot=slot, blocks=n_freed,
+                             shared=n_shared)
 
     # -- decode-step views ---------------------------------------------------
     def table_rows(self, slots) -> np.ndarray:

@@ -25,6 +25,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.policies import FIFO, SRTF, Policy
+from repro.obs import NULL_TRACER
 from repro.serve.cache import CachePool
 
 #: serve-queue ordering policies (names per the serving literature).
@@ -91,9 +92,15 @@ class ContinuousScheduler:
     cache-unit budget check at admission: a request over its tenant's
     budget is skipped — NOT queued-blocking, so other tenants' admissible
     requests behind it still admit this round.
+
+    ``tracer`` (an ``obs.Tracer``) records every admission decision —
+    admit / budget_skip / defer / preempt — as structured events; the
+    default ``NULL_TRACER`` is falsy, so tracing off costs one branch per
+    decision.
     """
 
-    def __init__(self, pool: CachePool, policy="fcfs", allocation=None):
+    def __init__(self, pool: CachePool, policy="fcfs", allocation=None,
+                 tracer=NULL_TRACER):
         if isinstance(policy, Policy):
             self.policy: Policy = policy
         elif policy in SERVE_POLICIES:
@@ -103,6 +110,8 @@ class ContinuousScheduler:
                            f"known: {sorted(SERVE_POLICIES)}")
         self.pool = pool
         self.allocation = allocation
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        self.n_preempted = 0           # cumulative preemptions this run
         self.waiting: List[ServeRequest] = []
         self.active: Dict[int, ServeRequest] = {}
         #: admitted-but-not-yet-prefilled requests: the engine drains this
@@ -135,6 +144,7 @@ class ContinuousScheduler:
             if r.t_arrived is None:
                 r.t_arrived = now
         admitted = []
+        tr = self.tracer
         for req in self.policy.order(ready, float(self.step)):
             # tenant budget: a request past its tenant's cache-unit budget
             # is skipped (its tenant already holds its allocated share) —
@@ -142,6 +152,11 @@ class ContinuousScheduler:
             if (self.allocation is not None
                     and not self.allocation.admissible(req, self.active,
                                                        self.pool)):
+                if tr:
+                    why = self.allocation.last_decision or {}
+                    tr.emit("budget_skip", req=req.job_id, tenant=req.tenant,
+                            held=why.get("held"), need=why.get("need"),
+                            budget=why.get("budget"))
                 continue
             # paged pools admit by free *blocks* (length-proportional, with a
             # watermark reserve); slot pools by free slots.
@@ -152,6 +167,9 @@ class ContinuousScheduler:
                 # THAT request — unrelated admissible requests behind it must
                 # not wait a round; pool exhaustion still ends the scan.
                 if getattr(self.pool, "deferred_last_alloc", False):
+                    if tr:
+                        tr.emit("defer", req=req.job_id, tenant=req.tenant,
+                                cause="prefix_unready")
                     continue
                 break
             req.slot = slot
@@ -161,6 +179,14 @@ class ContinuousScheduler:
             self.waiting.remove(req)
             self.prefill_queue.append(req)
             admitted.append(req)
+            if tr:
+                units = (self.pool.owned_blocks(slot)
+                         if hasattr(self.pool, "owned_blocks") else 1)
+                tr.emit("admit", req=req.job_id, tenant=req.tenant, slot=slot,
+                        prompt_len=len(req.prompt),
+                        max_new=req.max_new_tokens,
+                        wait_steps=float(self.step) - req.arrival_time,
+                        units=units)
         return admitted
 
     def drain_prefill(self) -> List[ServeRequest]:
@@ -169,7 +195,7 @@ class ContinuousScheduler:
         self.prefill_queue.clear()
         return items
 
-    def preempt(self, req: ServeRequest) -> None:
+    def preempt(self, req: ServeRequest, cause: str = "pool_pressure") -> None:
         """Return an active request to the queue under block-pool pressure.
 
         Its slot and blocks are freed and its generated tokens discarded;
@@ -178,6 +204,11 @@ class ContinuousScheduler:
         """
         if req.slot is None or self.active.get(req.slot) is not req:
             raise ValueError("can only preempt an active request")
+        self.n_preempted += 1
+        if self.tracer:
+            self.tracer.emit("preempt", req=req.job_id, tenant=req.tenant,
+                             slot=req.slot, cause=cause,
+                             n_preempted=self.n_preempted)
         self.pool.free(req.slot)
         del self.active[req.slot]
         req.slot = None

@@ -324,6 +324,9 @@ class TenantAllocation:
     shares: Dict[str, TenantShare]
     total_units: int
     max_k: int
+    #: arithmetic of the most recent ``admissible`` check (held / need /
+    #: budget), read by the scheduler's ``budget_skip`` trace event
+    last_decision: Optional[Dict[str, int]] = None
 
     def share(self, tenant_id: str) -> Optional[TenantShare]:
         return self.shares.get(tenant_id)
@@ -346,14 +349,23 @@ class TenantAllocation:
     def admissible(self, req, active, pool) -> bool:
         """Budget check at admission: the request's footprint fits the
         tenant's unit budget. A tenant with nothing active always passes
-        (budgets guide, they must never starve)."""
+        (budgets guide, they must never starve).
+
+        ``last_decision`` keeps the arithmetic of the MOST RECENT check —
+        (units held, request footprint, budget) — so the scheduler's
+        ``budget_skip`` trace event can say why a request was skipped, not
+        just that it was."""
         share = self.shares.get(req.tenant)
         if share is None:
+            self.last_decision = None
             return True
         used = self.units_used(req.tenant, active, pool)
+        need = self.footprint(req, pool)
+        self.last_decision = {"held": used, "need": need,
+                              "budget": share.units}
         if used == 0:
             return True
-        return used + self.footprint(req, pool) <= share.units
+        return used + need <= share.units
 
     def reserves(self) -> Dict[str, int]:
         """Per-tenant watermark headroom (blocks) — installed on the

@@ -1,0 +1,290 @@
+"""Observability tests: tracer ring semantics, metrics math, event-schema
+stability (golden trace), tracing-on token identity, and the offline
+trace_report analyzer."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.trace_report import build_report
+from repro.obs import (EVENT_SCHEMA, NULL_TRACER, SPAN_EVENTS, Histogram,
+                       MetricsRegistry, NullTracer, Tracer, load_trace,
+                       to_chrome_trace, validate_events)
+from repro.serve import (ServeEngine, ServeRequest, Tenant, TenantRegistry)
+
+
+def _requests(cfg, lengths, max_new=4, arrivals=None, tenants=None, seed=11):
+    rng = np.random.default_rng(seed)
+    arrivals = arrivals or [0.0] * len(lengths)
+    tenants = tenants or ["default"] * len(lengths)
+    return [ServeRequest(rng.integers(1, cfg.vocab_size, size=s)
+                         .astype(np.int32), max_new_tokens=max_new,
+                         arrival_time=a, tenant=t)
+            for s, a, t in zip(lengths, arrivals, tenants)]
+
+
+# ---------------------------------------------------------------------------
+# tracer
+# ---------------------------------------------------------------------------
+def test_tracer_ring_overflow_drops_oldest():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.emit("defer", req=i, tenant="t", cause="test")
+    assert len(tr) == 4
+    assert tr.dropped == 6
+    # the ring keeps the TAIL of the stream (newest events)
+    assert [e["req"] for e in tr.events] == [6, 7, 8, 9]
+
+
+def test_tracer_step_clock_and_wall_time():
+    tr = Tracer()
+    tr.step = 7.0
+    tr.emit("prefix_evict", blocks=1)
+    tr.emit("prefix_evict", step=3.0, blocks=2)   # explicit step override
+    a, b = tr.events
+    assert a["step"] == 7.0 and b["step"] == 3.0
+    assert 0.0 <= a["t"] <= b["t"]
+
+
+def test_tracer_capacity_validated():
+    with pytest.raises(ValueError):
+        Tracer(capacity=0)
+
+
+def test_null_tracer_is_falsy_noop():
+    assert not NullTracer()
+    assert not NULL_TRACER
+    NULL_TRACER.emit("admit", req=1)       # no-op, no error
+    NULL_TRACER.step = 5.0                 # engine advances it freely
+    assert NULL_TRACER.events == []
+
+
+def test_dump_and_load_roundtrip(tmp_path):
+    tr = Tracer(capacity=8)
+    tr.emit("prefix_evict", blocks=1)
+    tr.emit("defer", req=0, tenant="t0", cause="prefix_unready")
+    path = str(tmp_path / "t.jsonl")
+    tr.dump_jsonl(path)
+    events = load_trace(path)
+    assert events[0]["ev"] == "trace_meta"
+    assert events[0]["events"] == 2 and events[0]["capacity"] == 8
+    assert [e["ev"] for e in events[1:]] == ["prefix_evict", "defer"]
+    assert validate_events(events) == []
+
+
+def test_validate_events_catches_drift():
+    ok = {"ev": "defer", "step": 0.0, "t": 0.0,
+          "req": 1, "tenant": "t", "cause": "x"}
+    assert validate_events([ok]) == []
+    bad = [
+        {"ev": "not_a_type", "step": 0.0, "t": 0.0},
+        {"ev": "defer", "step": 0.0, "t": 0.0, "req": 1},       # missing
+        {**ok, "extra_field": 1},                               # extra
+    ]
+    problems = validate_events(bad)
+    assert len(problems) == 3
+    assert "unknown type" in problems[0]
+    assert "missing=['cause', 'tenant']" in problems[1]
+    assert "extra=['extra_field']" in problems[2]
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+def test_histogram_percentiles_match_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=501)
+    h = Histogram("x")
+    for v in xs:
+        h.record(v)
+    for q in (0, 10, 50, 95, 99, 100):
+        assert h.percentile(q) == pytest.approx(np.percentile(xs, q))
+    assert h.mean == pytest.approx(xs.mean())
+    s = h.summary()
+    assert s["count"] == 501
+    assert s["min"] == pytest.approx(xs.min())
+    assert s["max"] == pytest.approx(xs.max())
+
+
+def test_histogram_overflow_decimates_but_keeps_exact_extremes():
+    h = Histogram("x", max_samples=64)
+    for v in range(1000):
+        h.record(float(v))
+    assert h.count == 1000
+    assert h.vmin == 0.0 and h.vmax == 999.0
+    assert len(h.values) <= 64
+    # decimated percentiles stay close to the true distribution
+    assert h.percentile(50) == pytest.approx(499.5, abs=40)
+    with pytest.raises(ValueError):
+        h.percentile(101)
+
+
+def test_registry_counters_gauges_series():
+    m = MetricsRegistry()
+    m.inc("steps", 4)
+    m.inc("steps")
+    m.set("queue_depth", 3)
+    m.hi("max_active", 2)
+    m.hi("max_active", 1)                  # high watermark keeps the max
+    assert m.value("steps") == 5.0
+    assert m.value("max_active") == 2.0
+    assert m.value("missing", -1.0) == -1.0
+    m.sample(step=8)
+    m.set("queue_depth", 1)
+    m.sample(step=16)
+    mean, peak = m.series_stats("queue_depth")
+    assert (mean, peak) == (2.0, 3.0)
+    # fallback: an unsampled name reports its live value as a flat series
+    m.set("fresh", 7.0)
+    assert m.series_stats("fresh") == (7.0, 7.0)
+    summ = m.summary()
+    assert summ["counters"]["steps"] == 5.0
+    assert summ["series"]["queue_depth"] == 2
+
+
+# ---------------------------------------------------------------------------
+# golden trace: event-schema stability on a small deterministic run
+# ---------------------------------------------------------------------------
+def test_golden_trace_contiguous():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    tr = Tracer()
+    ServeEngine(cfg, max_len=16, n_slots=2, tracer=tr).run(
+        _requests(cfg, [5, 7]))
+    assert [e["ev"] for e in tr.events] == [
+        "run_start", "admit", "admit", "prefill", "prefill",
+        "decode_horizon", "decode_horizon", "evict", "evict", "run_end"]
+    assert validate_events(tr.events) == []
+    start = tr.events[0]
+    assert start["backend"] == "contiguous" and start["n_requests"] == 2
+
+
+def test_golden_trace_paged():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    tr = Tracer()
+    ServeEngine(cfg, max_len=16, n_slots=2, cache="paged", block_size=4,
+                tracer=tr).run(_requests(cfg, [5, 7]))
+    assert [e["ev"] for e in tr.events] == [
+        "run_start", "block_alloc", "admit", "block_alloc", "admit",
+        "prefill_round", "prefill_round", "block_grow",
+        "decode_horizon", "decode_horizon",
+        "block_free", "block_free", "evict", "evict", "run_end"]
+    assert validate_events(tr.events) == []
+
+
+def test_tracing_on_token_identity_paged_churn():
+    """Tracing must observe, never perturb: a churny paged config (tiny
+    pool, staggered arrivals, prefix cache) produces token-identical
+    outputs with and without a tracer attached."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    kw = dict(max_len=32, n_slots=3, cache="paged", block_size=4,
+              n_blocks=14, prefix_cache=True)
+    mk = lambda: _requests(cfg, [7, 12, 5, 9], max_new=6,  # noqa: E731
+                           arrivals=[0.0, 0.0, 2.0, 4.0])
+    off, s_off = ServeEngine(cfg, **kw).run(mk())
+    tr = Tracer()
+    on, s_on = ServeEngine(cfg, tracer=tr, **kw).run(mk())
+    assert [r.output for r in on] == [r.output for r in off]
+    assert s_on.steps == s_off.steps
+    assert s_on.decode_dispatches == s_off.decode_dispatches
+    assert validate_events(tr.events) == []
+    kinds = {e["ev"] for e in tr.events}
+    assert {"block_alloc", "block_free", "decode_horizon",
+            "prefill_round"} <= kinds
+
+
+def test_stats_queue_and_occupancy_summaries_without_tracing():
+    """The metrics half is always on: queue-depth / occupancy summaries
+    exist on a plain untraced run."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    _, st = ServeEngine(cfg, max_len=32, n_slots=2).run(
+        _requests(cfg, [7, 12, 5, 9], max_new=6,
+                  arrivals=[0.0, 0.0, 2.0, 4.0]))
+    assert st.max_queue_depth >= 1            # 4 requests over 2 slots queue
+    assert st.mean_queue_depth > 0.0
+    assert 0.0 < st.mean_occupancy <= 1.0
+    assert st.max_occupancy == 1.0
+
+
+# ---------------------------------------------------------------------------
+# chrome export
+# ---------------------------------------------------------------------------
+def test_chrome_export_structure():
+    tr = Tracer()
+    tr.emit("admit", req=0, tenant="t0", slot=1, prompt_len=5, max_new=4,
+            wait_steps=0.0, units=2)
+    tr.emit("decode_horizon", k=8, width=4, active=3, full=False,
+            dur_s=0.25)
+    doc = to_chrome_trace(tr.events)
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert any(e["name"] == "process_name" for e in meta)
+    tracks = {e["args"]["name"] for e in meta if e["name"] == "thread_name"}
+    assert {"scheduler", "prefill", "decode", "pool"} <= tracks
+    admit = next(e for e in evs if e.get("name") == "admit")
+    assert admit["ph"] == "i" and admit["args"]["tenant"] == "t0"
+    span = next(e for e in evs if e["ph"] == "X")
+    assert span["name"] == "decode[K=8,W=4]"
+    assert span["dur"] == pytest.approx(0.25 * 1e6)
+    assert span["ts"] >= 0.0
+    json.dumps(doc)                       # serializable as written
+
+
+def test_chrome_tracks_cover_schema():
+    """Every span type renders as a duration; every schema type that the
+    engine emits maps onto a track."""
+    from repro.obs.chrome import _TRACKS
+    assert SPAN_EVENTS <= set(_TRACKS)
+    assert set(EVENT_SCHEMA) - {"trace_meta"} == set(_TRACKS)
+
+
+# ---------------------------------------------------------------------------
+# trace_report analyzer
+# ---------------------------------------------------------------------------
+def test_trace_report_two_tenant_run(tmp_path):
+    """End-to-end: a two-tenant paged run under pool pressure -> JSONL ->
+    analyzer. The report must reconstruct non-empty SLO timelines, both
+    tenants' occupancy shares, and the preemption-cause table."""
+    cfg = get_config("llama3.2-1b", smoke=True)
+    registry = TenantRegistry([Tenant("lat", slo_steps=16.0),
+                               Tenant("batch")])
+    tr = Tracer()
+    eng = ServeEngine(cfg, max_len=32, n_slots=2, cache="paged",
+                      block_size=4, n_blocks=7, watermark=0.0,
+                      tenants=registry, policy="slo", tracer=tr)
+    out, st = eng.run(_requests(
+        cfg, [6, 6, 4, 4], max_new=8, arrivals=[0.0, 0.0, 1.0, 3.0],
+        tenants=["batch", "batch", "lat", "lat"]))
+    assert all(r.done for r in out)
+    assert st.preemptions > 0             # the pool is sized to churn
+    assert validate_events(tr.events) == []
+
+    path = str(tmp_path / "trace.jsonl")
+    tr.dump_jsonl(path)
+    report = build_report(load_trace(path), n_buckets=4)
+    assert report["meta"]["dropped"] == 0
+    assert report["run"]["backend"] == "paged"
+    assert set(report["slo_timeline"]) == {"lat", "batch"}
+    for buckets in report["slo_timeline"].values():
+        assert sum(b["n"] for b in buckets) > 0
+    shares = report["occupancy_shares"]
+    assert set(shares) == {"lat", "batch"}
+    assert sum(s["share"] for s in shares.values()) == pytest.approx(1.0)
+    assert report["preemptions"]
+    assert all(row["cause"] == "pool_pressure"
+               for row in report["preemptions"])
+    assert report["dispatches"]["decode"]["dispatches"] >= 1
+    assert report["queue"]["lat"]["admitted"] == 2
+
+
+def test_trace_report_empty_timeline_flag(tmp_path):
+    """--require-slo-timeline is the CI assertion: a trace with no evict
+    events exits nonzero."""
+    from repro.launch.trace_report import main
+    tr = Tracer()
+    tr.emit("run_start", backend="paged", n_slots=2, horizon=8,
+            n_requests=0)
+    path = str(tmp_path / "empty.jsonl")
+    tr.dump_jsonl(path)
+    assert main([path, "--require-slo-timeline"]) == 1
+    assert main([path]) == 0

@@ -17,6 +17,7 @@ from repro.serve import (SLOSlack, CachePool, ContinuousScheduler,
                          ServeEngine, ServeRequest, Tenant, TenantAllocation,
                          TenantAllocator, TenantRegistry, TenantShare,
                          plan_allocation, profiles_from_requests)
+from repro.obs import RunObs
 from repro.serve.tenant import calibrate, profile_class, serve_rate
 
 
@@ -248,6 +249,13 @@ def test_pick_h_allocation_k_cap_and_waiting_slack():
 # ---------------------------------------------------------------------------
 # per-tenant stats + the unfinished accounting
 # ---------------------------------------------------------------------------
+def _obs(steps):
+    """A RunObs whose step clock reads ``steps`` (what run() hands _stats)."""
+    c = RunObs()
+    c.inc("steps", steps)
+    return c
+
+
 def _stamped(cfg, tenant, steps, wall, seed=0):
     r = ServeRequest(np.arange(1, 5, dtype=np.int32), max_new_tokens=2,
                      arrival_time=0.0, tenant=tenant)
@@ -269,8 +277,7 @@ def test_stats_unfinished_cannot_inflate_attainment():
     dropped.output = [1, 2]                  # done...
     dropped.finished_at = 5.0                # ...step clock stamped...
     assert dropped.latency_s is None         # ...but no wall stamps
-    stats = eng._stats([ok, dropped], eng._counters() | {"steps": 8},
-                       n_slots=2, wall=1.0)
+    stats = eng._stats([ok, dropped], _obs(8), n_slots=2, wall=1.0)
     assert stats.unfinished == 1
     assert stats.slo_attainment == 0.5
     assert stats.tenants["lat"]["unfinished"] == 1
@@ -285,8 +292,8 @@ def test_stats_slo_miss_on_each_clock():
     fast = _stamped(cfg, "t", steps=5, wall=0.1)
     slow_steps = _stamped(cfg, "t", steps=20, wall=0.1)
     slow_wall = _stamped(cfg, "t", steps=5, wall=5.0)
-    stats = eng._stats([fast, slow_steps, slow_wall],
-                       eng._counters() | {"steps": 20}, n_slots=2, wall=1.0)
+    stats = eng._stats([fast, slow_steps, slow_wall], _obs(20),
+                       n_slots=2, wall=1.0)
     assert stats.slo_attainment == pytest.approx(1 / 3)
     assert stats.unfinished == 0
 
@@ -295,8 +302,7 @@ def test_tenant_stats_none_without_tags_or_registry():
     cfg = get_config("llama3.2-1b", smoke=True)
     eng = ServeEngine(cfg, max_len=32)
     reqs = [_stamped(cfg, "default", 3, 0.1)]
-    assert eng._stats(reqs, eng._counters() | {"steps": 4},
-                      n_slots=1, wall=1.0).tenants is None
+    assert eng._stats(reqs, _obs(4), n_slots=1, wall=1.0).tenants is None
 
 
 def test_engine_validates_tenant_wiring():
