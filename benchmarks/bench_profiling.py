@@ -4,6 +4,12 @@
     ground-truth model (paper: within 3%);
 (b) CPU validation: binary-search probes (~8) vs exhaustive (24), curve error;
 (c) profiling-time reduction (paper: 10x for the matrix; 30x overall).
+
+Plus the serve-side loop closure: a measured-vs-analytic calibrate row that
+runs a small profiled engine, fits (t_tok, t_fixed) from its dispatch
+records via ``obs.ProfileStore.rate_fit``, and compares the sensitivity
+knees ``serve/tenant.py`` derives from the measured constants against the
+analytic defaults (ISSUE 8 / ROADMAP item 1).
 """
 from __future__ import annotations
 
@@ -46,4 +52,72 @@ def run():
             "max_rel_err": float(rel_err.max()),
             "probes": est.profile_probes,
         })
+    rows.extend(_measured_calibrate_rows())
     return rows
+
+
+def _measured_calibrate_rows():
+    """Close the serve-side loop: measured vs analytic calibrate.
+
+    Runs a tiny profiled engine (mixed widths and horizons so the store
+    sees >=2 distinct dispatched-token sizes), fits (t_tok, t_fixed) from
+    the dispatch records, then builds the same tenant class profile twice
+    — analytic defaults vs the measured fit — and reports the horizon-K
+    knee each one puts at the full unit budget plus the fitted t_tok
+    delta. Un-gated (wall time and fitted constants vary run to run); the
+    row documents that the measured path yields a usable, distinct fit.
+    """
+    from repro.configs import get_config
+    from repro.obs import DispatchProfiler, ProfileStore
+    from repro.serve import ServeEngine
+    from repro.serve.scheduler import ServeRequest
+    from repro.serve.tenant import profile_class
+
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    prof = DispatchProfiler(cfg)
+    eng = ServeEngine(cfg, max_len=64, n_slots=4, cache="paged",
+                      block_size=8, decode_horizon=8, profiler=prof)
+    rng = np.random.default_rng(11)
+
+    def reqs():
+        # staggered arrivals + mixed budgets => decode widths 1..4, mixed K
+        return [ServeRequest(
+            rng.integers(1, cfg.vocab_size,
+                         size=int(rng.integers(4, 10))).astype(np.int32),
+            max_new_tokens=int(rng.integers(2, 9)),
+            arrival_time=i / 2.0)
+            for i in range(8)]
+
+    t0 = time.perf_counter()
+    for _ in range(2):                  # second pass is compile-warm
+        eng.run(reqs())
+    wall = (time.perf_counter() - t0) * 1e6
+
+    store = ProfileStore()
+    store.add_run(prof, arch=arch, backend="paged")
+    fit = store.rate_fit(arch, "paged")
+
+    kw = dict(units_per_req=2, concurrency=8, total_units=16, max_k=8)
+    pa = profile_class("t", **kw)                               # analytic
+    knee_a = pa.matrix.best_second_axis(kw["total_units"])
+    if fit is None:
+        derived = (f"fit=none (need >=2 distinct dispatch sizes) "
+                   f"analytic_knee=K{knee_a:.0f}")
+        t_tok_m = float("nan")
+    else:
+        pm = profile_class("t", **kw, store=store, arch=arch,
+                           backend="paged")                     # measured
+        knee_m = pm.matrix.best_second_axis(kw["total_units"])
+        t_tok_m = pm.t_tok
+        derived = (f"src={pm.source} knee a=K{knee_a:.0f} m=K{knee_m:.0f} "
+                   f"t_tok a={pa.t_tok * 1e3:.2f}ms "
+                   f"m={pm.t_tok * 1e3:.3f}ms "
+                   f"d={abs(pm.t_tok - pa.t_tok) * 1e3:.2f}ms "
+                   f"t_fixed m={pm.t_fixed * 1e3:.2f}ms")
+    return [{
+        "name": "fig5_profiling/measured-calibrate",
+        "us_per_call": wall,
+        "derived": derived,
+        "t_tok_measured": t_tok_m,
+    }]

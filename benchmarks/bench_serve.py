@@ -104,6 +104,7 @@ def run():
     rows.extend(_horizon_rows(n, max_new))
     rows.extend(_tenant_rows())
     rows.extend(_obs_rows(n, max_new))
+    rows.extend(_profiled_rows(n, max_new))
     return rows
 
 
@@ -124,6 +125,31 @@ def _obs_rows(n, max_new):
     row["derived"] += (f" events={len(eng.tracer)} "
                        f"qd={st.mean_queue_depth:.1f} "
                        f"occ={st.mean_occupancy:.2f}")
+    return [row]
+
+
+def _profiled_rows(n, max_new):
+    """Dispatch-profiling cost, as a gated row: the same staggered paged
+    workload as ``_obs_rows`` with a tracer AND an ``obs.DispatchProfiler``
+    attached — every hook site pays its profiling branch, the roofline
+    arithmetic, and the ``dispatch_profile`` event emit. The row's
+    ``decode_ms_per_tok`` bound keeps profiling-ON overhead inside the
+    normal ``--check`` tolerance band (profiling-OFF is bounded by every
+    other serve row, which all hold the falsy ``NULL_PROFILER``)."""
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    from repro.obs import DispatchProfiler, Tracer
+    prof = DispatchProfiler(cfg)
+    eng = ServeEngine(cfg, max_len=64, n_slots=max(2, n // 2), cache="paged",
+                      block_size=8, tracer=Tracer(), profiler=prof)
+    _, st = _run_warm(eng, lambda: _requests(cfg, n, max_new, stagger=True))
+    row = _row(f"serve/obs-profiled/{arch}", st)
+    s = prof.summary()
+    dec = s["phases"].get("decode", {})
+    row["derived"] += (f" sigs={s['signatures']} "
+                       f"prof_disp={s['dispatches']} "
+                       f"compiles={dec.get('compiles', 0)} "
+                       f"util={st.decode_util:.2e}")
     return [row]
 
 

@@ -20,6 +20,13 @@ def load(jsonl: str):
     return recs
 
 
+def _num(v, spec: str, scale: float = 1.0) -> str:
+    """Format a possibly-missing numeric field; ``None`` renders as an em
+    dash (multipod records without probes, CPU backends whose
+    cost_analysis reports no FLOPs)."""
+    return "—" if v is None else f"{v * scale:{spec}}"
+
+
 def fmt_row(r) -> str:
     c, m, k = r["compute_s"], r["memory_s"], r["collective_s"]
     dom = r["bottleneck"]
@@ -28,8 +35,8 @@ def fmt_row(r) -> str:
     peak = mem.get("peak_bytes") or mem.get("bytes_per_device") or 0
     args = r.get("args_gib_per_device", "")
     return (f"| {r['arch']} | {r['shape']} | {c * 1e3:.1f} | {m * 1e3:.1f} | "
-            f"{k * 1e3:.1f} | **{dom}** | {ratio:.2f} | "
-            f"{(r['flops_per_chip'] or 0) / 1e12:.2f} | {args} |")
+            f"{k * 1e3:.1f} | **{dom}** | {_num(ratio, '.2f')} | "
+            f"{_num(r.get('flops_per_chip'), '.2f', 1e-12)} | {args} |")
 
 
 def main() -> None:

@@ -3,10 +3,25 @@
 Each combo runs in its own subprocess (fresh XLA, isolation against compile
 failures) and appends a JSON line to the output file. Single-pod runs carry
 the unrolled flop probes (roofline terms); multi-pod runs are the pass/fail
-lowering proof (+ memory analysis) without probes.
+lowering proof (+ memory analysis) without probes; ``--mesh host`` sweeps
+the 8-device host platform (CI-runnable — probes are skipped there too,
+host backends have no stable flop counters).
 
     PYTHONPATH=src python -m repro.launch.run_all_dryruns \
-        --out experiments/dryrun.jsonl [--mesh pod|multipod|both]
+        --out experiments/dryrun.jsonl [--mesh pod|multipod|host|both]
+
+``--archs``/``--shapes`` filter the sweep (comma lists) and ``--smoke``
+swaps in each arch's smoke variant — the CI host-mesh sweep is
+
+    python -m repro.launch.run_all_dryruns --mesh host --smoke \
+        --archs qwen2-0.5b,mamba2-780m --shapes decode_step \
+        --out experiments/dryrun.jsonl
+
+``--profile-store PATH`` folds the sweep's roofline terms (FLOPs/HBM
+bytes per chip, bound times, bottleneck) into an ``obs.ProfileStore``
+next to the serve engine's measured dispatch records — the per-(arch x
+shape x mesh) placement profile ROADMAP item 5 reads (optimistic
+profiling for placement, one substrate with the serving loop).
 """
 from __future__ import annotations
 
@@ -29,24 +44,70 @@ for _arch in ARCH_IDS:
             "(DESIGN.md skip note)")
 
 
-def combos(mesh_opt: str):
+def combos(mesh_opt: str, archs=None, shapes=None):
     meshes = ["pod", "multipod"] if mesh_opt == "both" else [mesh_opt]
-    for arch in ARCH_IDS:
-        for shape in INPUT_SHAPES:
+    for arch in (archs or ARCH_IDS):
+        for shape in (shapes or INPUT_SHAPES):
             if (arch, shape) in SKIPS:
                 continue
             for mesh in meshes:
                 yield arch, shape, mesh
 
 
+def _csv_filter(spec, universe, flag):
+    if not spec:
+        return None
+    vals = [p.strip() for p in spec.split(",") if p.strip()]
+    bad = [v for v in vals if v not in universe]
+    if bad:
+        raise SystemExit(f"{flag}: unknown entries {bad} "
+                         f"(known: {sorted(universe)})")
+    return vals
+
+
+def store_from_jsonl(out_path: str, store_path: str) -> int:
+    """Fold every dry-run record in ``out_path`` into the ProfileStore at
+    ``store_path`` (keyed merge — re-runs supersede). Returns the store's
+    record count."""
+    from repro.obs import ProfileStore
+
+    store = ProfileStore.load(store_path)
+    with open(out_path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                try:
+                    store.add_dryrun_record(json.loads(line))
+                except (json.JSONDecodeError, KeyError):
+                    continue
+    store.save(store_path)
+    return len(store)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="experiments/dryrun.jsonl")
-    ap.add_argument("--mesh", default="both", choices=["pod", "multipod", "both"])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod", "multipod", "host", "both"])
+    ap.add_argument("--archs", default=None,
+                    help="comma list of arch ids to sweep (default: all)")
+    ap.add_argument("--shapes", default=None,
+                    help="comma list of input shapes to sweep (default: all)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use each arch's smoke variant (CI-sized sweep)")
+    ap.add_argument("--no-probe", action="store_true",
+                    help="skip the flop probes on every mesh (multipod and "
+                         "host always skip them)")
+    ap.add_argument("--profile-store", default=None, metavar="PATH",
+                    help="also fold the sweep's roofline terms into this "
+                         "obs.ProfileStore JSONL (placement profile)")
     ap.add_argument("--timeout", type=float, default=3600.0)
     ap.add_argument("--resume", action="store_true",
                     help="skip combos already present in --out")
     args = ap.parse_args()
+
+    archs = _csv_filter(args.archs, set(ARCH_IDS), "--archs")
+    shapes = _csv_filter(args.shapes, set(INPUT_SHAPES), "--shapes")
 
     done = set()
     if args.resume and os.path.exists(args.out):
@@ -58,7 +119,7 @@ def main() -> None:
                 except json.JSONDecodeError:
                     pass
 
-    todo = [c for c in combos(args.mesh) if c not in done]
+    todo = [c for c in combos(args.mesh, archs, shapes) if c not in done]
     print(f"{len(todo)} combos to run "
           f"({len(SKIPS)} documented skips: {sorted(set(a for a, _ in SKIPS))})",
           flush=True)
@@ -67,8 +128,10 @@ def main() -> None:
         cmd = [sys.executable, "-m", "repro.launch.dryrun",
                "--arch", arch, "--shape", shape, "--mesh", mesh,
                "--out", args.out]
-        if mesh == "multipod":
+        if mesh in ("multipod", "host") or args.no_probe:
             cmd.append("--no-probe")
+        if args.smoke:
+            cmd += ["--cfg-json", '{"smoke": true}']
         t0 = time.time()
         print(f"[{i + 1}/{len(todo)}] {arch} {shape} {mesh} ...",
               end=" ", flush=True)
@@ -83,6 +146,11 @@ def main() -> None:
         except subprocess.TimeoutExpired:
             failures.append((arch, shape, mesh, "timeout"))
             print("TIMEOUT", flush=True)
+
+    if args.profile_store and os.path.exists(args.out):
+        n = store_from_jsonl(args.out, args.profile_store)
+        print(f"profile store: {args.profile_store} now holds {n} records",
+              flush=True)
 
     print(f"\ndone: {len(todo) - len(failures)} ok, {len(failures)} failed")
     for arch, shape, mesh, err in failures:

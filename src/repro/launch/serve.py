@@ -54,8 +54,19 @@ boundaries. Analyze a JSONL trace offline with::
 
     PYTHONPATH=src python -m repro.launch.trace_report out.jsonl
 
-Tracing off is the default and costs one branch per hook site, so the
-benchmarked decode numbers are unchanged:
+``--profile`` attaches the dispatch profiler (obs/prof.py): per-dispatch
+wall time with compile-vs-execute attribution, measured-vs-roofline
+utilization gauges, and per-tenant cost shares land in the summary's
+``profile`` block (and, with ``--trace``, as ``dispatch_profile`` events —
+Chrome counter tracks under ``--trace-format chrome``). ``--profile-store
+PATH`` closes the optimistic-profiling loop: measured per-signature costs
+merge into the JSONL store, and the tenant calibrate reads MEASURED
+(t_tok, t_fixed) back out of it when a fit exists (the summary's
+``calibrate_source`` says which path each tenant took). Profiling is
+read-only — ``--verify`` holds with it on.
+
+Tracing and profiling off is the default and each costs one branch per
+hook site, so the benchmarked decode numbers are unchanged:
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
         --engine continuous --cache paged --mesh host --slots 8 --batch 12 \
@@ -130,7 +141,7 @@ def tag_tenants(reqs, ids, mix) -> None:
         counts[j] += 1
 
 
-def build_tenancy(args, reqs, n_slots):
+def build_tenancy(args, reqs, n_slots, store=None):
     """Registry (+ profiler-planned allocation) for ``--tenants N``.
 
     The optimistic serve profiler reads each tenant's class shape off its
@@ -138,7 +149,10 @@ def build_tenancy(args, reqs, n_slots):
     the allocator plans block/lane/horizon budgets for the engine's pool
     geometry. ``--no-tenant-alloc`` keeps the registry — tags, SLO
     scoring, slack policy — without budgets (the capacity-proportional
-    baseline)."""
+    baseline). ``store`` (an ``obs.ProfileStore`` from
+    ``--profile-store``) feeds MEASURED rate constants into the calibrate
+    when its records support a fit — the knees then come from real
+    dispatch costs instead of the analytic defaults."""
     n = args.tenants
     slo = _csv(args.slo, n, "--slo")
     slo_s = _csv(args.slo_s, n, "--slo-s")
@@ -150,7 +164,7 @@ def build_tenancy(args, reqs, n_slots):
                slo_steps=slo[i], slo_s=slo_s[i]) for i in range(n)])
     tag_tenants(reqs, ids, [m if m is not None else 1.0 for m in mix])
     if not args.tenant_alloc:
-        return registry, None
+        return registry, None, None
     if args.cache == "paged":
         blocks_per_slot = -(-args.max_len // args.block_size)
         total_units = args.blocks or (n_slots or args.batch) * blocks_per_slot
@@ -163,11 +177,12 @@ def build_tenancy(args, reqs, n_slots):
         watermark_units = 0
     profiles = profiles_from_requests(
         registry, reqs, total_units=total_units, units_for=units_for,
-        max_k=args.decode_horizon)
+        max_k=args.decode_horizon, store=store, arch=args.arch,
+        backend=args.cache)
     allocation = plan_allocation(
         registry, profiles, total_units, total_lanes=args.prefill_lanes,
         max_k=args.decode_horizon, watermark_units=watermark_units)
-    return registry, allocation
+    return registry, allocation, profiles
 
 
 def main() -> None:
@@ -253,6 +268,18 @@ def main() -> None:
     ap.add_argument("--metrics-every", type=int, default=1,
                     help="sample the metrics time series every N decode "
                          "boundaries (0 disables series sampling)")
+    ap.add_argument("--profile", action="store_true",
+                    help="attach a dispatch profiler: per-dispatch wall "
+                         "time with compile/execute attribution, roofline "
+                         "utilization gauges, per-tenant cost shares (the "
+                         "summary gains a 'profile' block; with --trace, "
+                         "dispatch_profile events land in the trace)")
+    ap.add_argument("--profile-store", default=None, metavar="PATH",
+                    help="ProfileStore JSONL (e.g. experiments/"
+                         "profiles.jsonl): read MEASURED rate constants "
+                         "into the tenant calibrate when a fit exists; "
+                         "with --profile, this run's per-signature costs "
+                         "are merged back in")
     args = ap.parse_args()
 
     if args.verify and args.temperature > 0:
@@ -268,14 +295,27 @@ def main() -> None:
     # class shape (footprint, concurrency) off the tagged request set.
     reqs = make_requests(cfg, args.batch, args.prompt_len, args.max_new,
                          args.arrival_rate, shared_prefix=args.shared_prefix)
-    registry = allocation = None
+
+    store = None
+    if args.profile_store:
+        from repro.obs import ProfileStore
+        store = ProfileStore.load(args.profile_store)
+
+    registry = allocation = profiles = None
     if args.tenants > 0:
-        registry, allocation = build_tenancy(args, reqs, n_slots)
+        registry, allocation, profiles = build_tenancy(args, reqs, n_slots,
+                                                       store=store)
 
     tracer = None
     if args.trace:
         from repro.obs import Tracer
         tracer = Tracer(capacity=args.trace_capacity)
+
+    profiler = None
+    if args.profile:
+        from repro.obs import DispatchProfiler
+        n_dev = jax.device_count() if args.mesh == "host" else 1
+        profiler = DispatchProfiler(cfg, n_devices=n_dev)
 
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=n_blocks, watermark=args.watermark,
@@ -285,7 +325,8 @@ def main() -> None:
                      decode_horizon=args.decode_horizon,
                      eos_token=args.eos_token,
                      tenants=registry, allocation=allocation,
-                     tracer=tracer, metrics_every=args.metrics_every)
+                     tracer=tracer, metrics_every=args.metrics_every,
+                     profiler=profiler)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
@@ -324,6 +365,17 @@ def main() -> None:
         record["tenant_budgets"] = {
             tid: dataclasses.asdict(s)
             for tid, s in sorted(allocation.shares.items())}
+    if profiles is not None:
+        record["calibrate_source"] = {
+            tid: p.source for tid, p in sorted(profiles.items())}
+    if profiler is not None:
+        record["profile"] = profiler.summary()
+        if args.profile_store:
+            store.add_run(profiler, arch=args.arch, backend=args.cache,
+                          mesh=args.mesh)
+            store.save(args.profile_store)
+            record["profile"]["store"] = {"path": args.profile_store,
+                                          "records": len(store)}
 
     if args.verify:
         # the reference is the classic loop: single-device static engine,

@@ -14,6 +14,10 @@ the summaries the raw event stream only implies:
   * **Preemption-cause breakdown** — victims grouped by (cause, tenant).
   * **Dispatch summaries** — decode-horizon geometry (K, width) and
     prefill round shapes with wall-time splits.
+  * **Per-phase dispatch costs** — count / total / mean wall per phase
+    from the span events; traces recorded with ``--profile`` additionally
+    carry ``dispatch_profile`` events, which add the compile-vs-execute
+    split and the measured-vs-roofline utilization column.
   * **Queue report** — admission wait distribution plus budget_skip /
     defer counts per tenant.
 
@@ -138,6 +142,46 @@ def dispatch_summary(events):
     }
 
 
+#: span event type -> profiler phase name (the join key between the span
+#: tracks and obs/prof.py's dispatch_profile events)
+_PHASE_OF = {"prefill": "prefill", "prefill_round": "prefill_round",
+             "decode_horizon": "decode"}
+
+
+def phase_costs(events):
+    """Per-phase dispatch-cost rows: count, total/mean wall from the span
+    events, plus — when the trace carries ``dispatch_profile`` events
+    (``launch/serve.py --profile --trace``) — the compile count/seconds
+    and the mean measured-vs-roofline utilization of execute dispatches.
+    ``util`` is None for traces recorded without profiling."""
+    spans = defaultdict(list)
+    for e in events:
+        ph = _PHASE_OF.get(e["ev"])
+        if ph is not None:
+            spans[ph].append(float(e["dur_s"]))
+    prof = defaultdict(lambda: {"utils": [], "compiles": 0, "compile_s": 0.0})
+    for e in events:
+        if e["ev"] == "dispatch_profile":
+            p = prof[e["phase"]]
+            if e.get("compile"):
+                p["compiles"] += 1
+                p["compile_s"] += float(e["dur_s"])
+            elif e.get("util") is not None:
+                p["utils"].append(float(e["util"]))
+    rows = []
+    for ph in sorted(set(spans) | set(prof)):
+        durs = spans.get(ph, [])
+        p = prof.get(ph)
+        rows.append({
+            "phase": ph, "count": len(durs),
+            "total_ms": sum(durs) * 1e3, "mean_ms": _mean(durs) * 1e3,
+            "compiles": p["compiles"] if p else 0,
+            "compile_ms": p["compile_s"] * 1e3 if p else 0.0,
+            "util": (_mean(p["utils"]) if p and p["utils"] else None),
+        })
+    return rows
+
+
 def queue_report(events):
     """Admission waits plus per-tenant budget_skip / defer counts."""
     waits = defaultdict(list)
@@ -173,6 +217,7 @@ def build_report(events, n_buckets: int = 8) -> dict:
         "occupancy_shares": occupancy_shares(body),
         "preemptions": preemption_breakdown(body),
         "dispatches": dispatch_summary(body),
+        "phase_costs": phase_costs(body),
         "queue": queue_report(body),
     }
 
@@ -194,6 +239,15 @@ def _print_human(report: dict) -> None:
           f"prefill: {d['prefill']['dispatches']} dispatches, "
           f"{d['prefill']['wall_s']:.3f}s; "
           f"{d['horizon_shrinks']} horizon shrinks")
+    if report["phase_costs"]:
+        print("\nphase costs:")
+        print(f"  {'phase':<14} {'count':>5} {'total ms':>9} {'mean ms':>8} "
+              f"{'compiles':>8} {'util':>6}")
+        for row in report["phase_costs"]:
+            util = f"{row['util']:.3g}" if row["util"] is not None else "—"
+            print(f"  {row['phase']:<14} {row['count']:>5} "
+                  f"{row['total_ms']:>9.1f} {row['mean_ms']:>8.2f} "
+                  f"{row['compiles']:>8} {util:>6}")
     print("\noccupancy shares (step-weighted):")
     for t, s in report["occupancy_shares"].items():
         print(f"  {t:<10} {s['share']*100:5.1f}%  "

@@ -11,6 +11,12 @@ worked example):
     time series (``MetricsRegistry``); always on — ``ServeStats`` is
     built from it.
   * ``obs.chrome``  — Chrome trace-event (Perfetto-viewable) export.
+  * ``obs.prof``    — dispatch-level profiler (``DispatchProfiler``):
+    per-dispatch wall time with compile-vs-execute attribution, analytic
+    roofline utilization, per-tenant cost shares, and the persisted
+    ``ProfileStore`` that feeds the tenant profiler's measured-calibrate
+    path. ``NULL_PROFILER`` is the falsy off-state the engine holds by
+    default.
 
 ``launch/trace_report.py`` is the offline analyzer over dumped traces.
 """
@@ -20,9 +26,12 @@ from repro.obs.events import (EVENT_SCHEMA, NULL_TRACER, SPAN_EVENTS,
                               validate_events)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                RunObs)
+from repro.obs.prof import (NULL_PROFILER, DispatchProfiler,
+                            NullDispatchProfiler, ProfileStore)
 
 __all__ = [
-    "Counter", "EVENT_SCHEMA", "Gauge", "Histogram", "MetricsRegistry",
-    "NULL_TRACER", "NullTracer", "RunObs", "SPAN_EVENTS", "Tracer",
+    "Counter", "DispatchProfiler", "EVENT_SCHEMA", "Gauge", "Histogram",
+    "MetricsRegistry", "NULL_PROFILER", "NULL_TRACER", "NullDispatchProfiler",
+    "NullTracer", "ProfileStore", "RunObs", "SPAN_EVENTS", "Tracer",
     "load_trace", "to_chrome_trace", "validate_events", "write_chrome_trace",
 ]

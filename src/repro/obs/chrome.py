@@ -15,6 +15,14 @@ Track layout (one process, one thread per phase):
     tid 1  prefill     prefill + prefill_round spans
     tid 2  decode      decode_horizon spans (+ horizon_shrink instants)
     tid 3  pool        block_alloc / block_grow / block_free / prefix_evict
+    tid 4  profile     dispatch_profile — utilization counter ("C") tracks
+                       per phase, compile dispatches as instants
+
+``dispatch_profile`` events (obs/prof.py) render as Chrome COUNTER events:
+one ``util[<phase>]`` counter track per phase carrying the
+measured-vs-roofline utilization ratio over time, so Perfetto plots the
+utilization curve directly under the span tracks. Compile dispatches (no
+meaningful utilization) render as instants named ``compile[<sig>]``.
 """
 from __future__ import annotations
 
@@ -33,6 +41,7 @@ _TRACKS = {
     "decode_horizon": (2, "decode"), "horizon_shrink": (2, "decode"),
     "block_alloc": (3, "pool"), "block_grow": (3, "pool"),
     "block_free": (3, "pool"), "prefix_evict": (3, "pool"),
+    "dispatch_profile": (4, "profile"),
 }
 
 
@@ -65,7 +74,16 @@ def to_chrome_trace(events: Iterable[dict]) -> dict:
         tid = _TRACKS.get(ev, (0, "scheduler"))[0]
         args = {k: v for k, v in e.items() if k not in ("ev", "t")}
         t_us = float(e.get("t", 0.0)) * 1e6
-        if ev in SPAN_EVENTS:
+        if ev == "dispatch_profile":
+            if e.get("compile"):
+                out.append({"ph": "i", "pid": pid, "tid": tid,
+                            "name": f"compile[{e.get('sig')}]",
+                            "ts": t_us, "s": "t", "args": args})
+            else:
+                out.append({"ph": "C", "pid": pid, "tid": tid,
+                            "name": f"util[{e.get('phase')}]", "ts": t_us,
+                            "args": {"util": float(e.get("util") or 0.0)}})
+        elif ev in SPAN_EVENTS:
             dur_us = max(float(e.get("dur_s") or 0.0) * 1e6, 1.0)
             # the tracer stamps t at emit time (span END); Chrome wants the
             # start timestamp.

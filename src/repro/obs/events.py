@@ -51,6 +51,10 @@ EVENT_SCHEMA: Dict[str, FrozenSet[str]] = {
     "prefill_round": frozenset({"lanes", "width", "dur_s"}),
     "decode_horizon": frozenset({"k", "width", "active", "full", "dur_s"}),
     "horizon_shrink": frozenset({"from_k", "to_k", "cause"}),
+    # -- dispatch profiling (obs/prof.py; emitted only when a profiler AND
+    # a tracer are both attached) -------------------------------------------
+    "dispatch_profile": frozenset({"phase", "sig", "dur_s", "compile",
+                                   "tokens", "flops", "hbm_bytes", "util"}),
     # -- block pool ---------------------------------------------------------
     "block_alloc": frozenset({"slot", "blocks", "hits"}),
     "block_grow": frozenset({"slot", "blocks"}),

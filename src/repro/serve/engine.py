@@ -85,7 +85,7 @@ from jax.sharding import NamedSharding
 
 from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
-from repro.obs import NULL_TRACER, RunObs
+from repro.obs import NULL_PROFILER, NULL_TRACER, RunObs
 from repro.serve.cache import CachePool
 from repro.serve.paged import BlockManager
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
@@ -175,6 +175,9 @@ class ServeStats:
     max_queue_depth: int = 0
     mean_occupancy: float = 0.0       # pool occupancy at horizon boundaries
     max_occupancy: float = 0.0        # (paged: used blocks; contig: slots)
+    # -- dispatch profiling (obs.prof; 0.0 with profiling off) -----------------
+    decode_util: float = 0.0          # mean measured-vs-roofline utilization
+                                      # over execute decode dispatches
 
 
 @dataclass
@@ -306,6 +309,16 @@ class ServeEngine:
     live regardless: counters/gauges sampled every ``metrics_every``
     horizon boundaries feed ``ServeStats`` and its queue-depth/occupancy
     summaries.
+
+    ``profiler`` (an ``obs.DispatchProfiler``) turns on dispatch-level
+    profiling: every jitted hot path — per-request contiguous prefill,
+    lane-batched paged prefill rounds, K-step decode horizons (the
+    compaction gather/scatter runs inside the horizon program, tagged by
+    its ``full`` flag) — records wall time with compile-vs-execute
+    attribution, an analytic roofline utilization ratio, and per-tenant
+    cost shares. Read-only like tracing (outputs identical on or off; off
+    costs one falsy check per site); held per-ENGINE, not per-run, so the
+    seen-signature set spans warm-up runs.
     """
 
     def __init__(self, cfg: ArchConfig, params=None, max_len: int = 256,
@@ -319,7 +332,7 @@ class ServeEngine:
                  eos_token: Optional[int] = None,
                  tenants: Optional[TenantRegistry] = None,
                  allocation: Optional[TenantAllocation] = None,
-                 tracer=None, metrics_every: int = 1):
+                 tracer=None, metrics_every: int = 1, profiler=None):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -350,6 +363,10 @@ class ServeEngine:
         #: event tracer (obs.Tracer) — defaults to the falsy NullTracer, so
         #: every hook below is one truthiness check when tracing is off.
         self.tracer = tracer if tracer is not None else NULL_TRACER
+        #: dispatch profiler (obs.DispatchProfiler) — same falsy-default
+        #: contract; engine-lifetime (not per-run) so first-call-per-
+        #: signature compile attribution survives warm-up runs.
+        self.profiler = profiler if profiler is not None else NULL_PROFILER
         #: sample the metrics gauges into time series every N decode
         #: boundaries (0 disables the series; the gauges still update, so
         #: the stats' queue/occupancy summaries survive via the fallback).
@@ -705,6 +722,7 @@ class ServeEngine:
             max_queue_depth=int(qd_max),
             mean_occupancy=occ_mean,
             max_occupancy=occ_max,
+            decode_util=m.series_stats("util[decode]")[0],
         )
         return stats
 
@@ -849,6 +867,16 @@ class ServeEngine:
         c.inc("host_syncs")
         dt = time.perf_counter() - t0
         c.inc("decode_s", dt)
+        prof = self.profiler
+        if prof:
+            # KV positions at dispatch start (outputs not yet extended);
+            # tenants maps tenant -> live rows for the cost-share split.
+            kv = sum(len(sched.active[s].prompt) + len(sched.active[s].output)
+                     for s in act)
+            prof.record("decode", dt, width=len(idx), k=h, full=full,
+                        kv_pos_sum=kv,
+                        tenants=Counter(sched.active[s].tenant for s in act),
+                        obs=c)
         counts = self._unpack_horizon(sched, act, rows, blk, h, n_slots, c)
         c.inc("rows_decoded", len(idx) * h)
         c.hi("max_active", len(act))
@@ -902,6 +930,7 @@ class ServeEngine:
 
         state = _DecodeState(n_slots, sharding=self.sharding)
         tr = c.tracer
+        prof = self.profiler
         dmult = (self.sharding.axis_size("data")
                  if self.sharding is not None else 1)
 
@@ -911,7 +940,7 @@ class ServeEngine:
             admitted = sched.drain_prefill()
             t0 = time.perf_counter()
             for r in admitted:
-                rt0 = time.perf_counter() if tr else 0.0
+                rt0 = time.perf_counter() if (tr or prof) else 0.0
                 tokens = jnp.asarray(
                     np.asarray(r.prompt, np.int32))[None, :]
                 logits, row = self._prefill(self.params, tokens)
@@ -922,10 +951,18 @@ class ServeEngine:
                 r.output.append(tok)
                 if self.eos_token is not None and tok == self.eos_token:
                     r.finished_early = True
-                if tr:
-                    tr.emit("prefill", req=r.job_id, tenant=r.tenant,
-                            slot=r.slot, prompt_len=len(r.prompt),
-                            dur_s=time.perf_counter() - rt0)
+                if tr or prof:
+                    rdt = time.perf_counter() - rt0
+                    if tr:
+                        tr.emit("prefill", req=r.job_id, tenant=r.tenant,
+                                slot=r.slot, prompt_len=len(r.prompt),
+                                dur_s=rdt)
+                    if prof:
+                        # contiguous prefill jits one program per prompt
+                        # length — seq is the static half of the signature.
+                        prof.record("prefill", rdt, seq=len(r.prompt),
+                                    tokens=len(r.prompt),
+                                    tenants={r.tenant: 1}, obs=c)
             if admitted:
                 c.inc("prefill_s", time.perf_counter() - t0)
                 state.set_rows(
@@ -998,6 +1035,7 @@ class ServeEngine:
         queue = deque(reqs)
         lanes: List[_PrefillLane] = []
         tr = c.tracer
+        prof = self.profiler
         while queue or lanes:
             while queue and len(lanes) < self.prefill_lanes:
                 r = self._next_lane_req(queue, lanes)
@@ -1026,15 +1064,24 @@ class ServeEngine:
                 cols = [ln.state for ln in lanes]
                 cols += [np.zeros_like(cols[0])] * (w - len(lanes))
                 state = jnp.asarray(np.concatenate(cols, axis=1))
-            rt0 = time.perf_counter() if tr else 0.0
+            rt0 = time.perf_counter() if (tr or prof) else 0.0
             logits, pool.buffers, new_state = self._prefill(
                 self.params, pool.buffers, jnp.asarray(tokens),
                 jnp.asarray(starts), jnp.asarray(nv), jnp.asarray(tables),
                 state, jnp.asarray(caps), cap=cap_static)
             c.inc("prefill_dispatches")
-            if tr:
-                tr.emit("prefill_round", lanes=len(lanes), width=w,
-                        dur_s=time.perf_counter() - rt0)
+            if tr or prof:
+                rdt = time.perf_counter() - rt0
+                if tr:
+                    tr.emit("prefill_round", lanes=len(lanes), width=w,
+                            dur_s=rdt)
+                if prof:
+                    # one program per width bucket; padded lanes compute,
+                    # so the roofline counts the full [w, bs] dispatch.
+                    prof.record("prefill_round", rdt, width=w, tokens=w * bs,
+                                kv_pos_sum=int(starts.sum()),
+                                tenants=Counter(ln.req.tenant
+                                                for ln in lanes), obs=c)
             if new_state is not None:
                 new_state = np.asarray(new_state)
             done_idx: List[int] = []

@@ -48,6 +48,12 @@ class ServeSharding:
         return dict(zip(self.mesh.axis_names,
                         self.mesh.devices.shape)).get(name, 1)
 
+    @property
+    def n_devices(self) -> int:
+        """Total devices under the plan — the per-chip divisor the
+        dispatch profiler's roofline terms use."""
+        return int(self.mesh.devices.size)
+
     def replicated(self) -> NamedSharding:
         """Fully-replicated NamedSharding (the decode-state arrays: they are
         a few int32 per slot — delta-updated from the host — so replication

@@ -211,6 +211,8 @@ class ServeClassProfile:
     t_tok: float                  # seconds per decode token per row
     t_fixed: float                # per-dispatch overhead seconds
     matrix: SensitivityMatrix = field(repr=False)
+    source: str = "analytic"      # where (t_tok, t_fixed) came from:
+                                  # "analytic" | "probed" | "measured"
 
     def lane_curve(self) -> Callable[[float], float]:
         """Prefill-lane sensitivity: a class can fill at most
@@ -222,7 +224,8 @@ def profile_class(tenant_id: str, *, units_per_req: int, concurrency: int,
                   total_units: int, max_k: int = 8,
                   t_tok: float = 2e-3, t_fixed: float = 6e-3,
                   probe: Optional[Callable[[int], float]] = None,
-                  ) -> ServeClassProfile:
+                  store=None, arch: Optional[str] = None,
+                  backend: Optional[str] = None) -> ServeClassProfile:
     """Build one class's sensitivity profile, optimistically.
 
     ``probe(k) -> tokens/s`` measures the REAL engine at full allocation
@@ -232,10 +235,20 @@ def profile_class(tenant_id: str, *, units_per_req: int, concurrency: int,
     the caller-supplied constants are used directly (cheap CLI default;
     units-axis knees are exact either way because the units axis is pure
     admission arithmetic).
+
+    ``store`` (an ``obs.ProfileStore``, with ``arch`` naming the model and
+    ``backend`` the cache kind) closes the measurement loop: when the
+    store's decode records for (arch, backend) support a rate fit, the
+    MEASURED (t_tok, t_fixed) replace the analytic defaults — the knees
+    then come from real dispatch costs (``launch.serve --profile-store``).
+    A probe still wins (it measured THIS workload), and a store without a
+    usable fit falls back to the analytic constants, so the path is safe
+    to leave flag-gated on.
     """
     units_per_req = max(int(units_per_req), 1)
     concurrency = max(int(concurrency), 1)
     probes, probe_s = 0, 0.0
+    source = "analytic"
     if probe is not None:
         t0 = time.perf_counter()
         r1 = probe(1)
@@ -244,6 +257,12 @@ def profile_class(tenant_id: str, *, units_per_req: int, concurrency: int,
         probes = 2
         n_rows = min(concurrency, total_units // units_per_req)
         t_tok, t_fixed = calibrate(r1, rk, max(n_rows, 1), max_k)
+        source = "probed"
+    elif store is not None and arch is not None:
+        fit = store.rate_fit(arch, backend)
+        if fit is not None:
+            t_tok, t_fixed = fit
+            source = "measured"
 
     # unit grid: one requests's footprint up to the pool, plus the pool
     # itself so the proportional floor always lands on the grid.
@@ -267,18 +286,23 @@ def profile_class(tenant_id: str, *, units_per_req: int, concurrency: int,
     return ServeClassProfile(tenant_id=tenant_id,
                              units_per_req=units_per_req,
                              concurrency=concurrency, t_tok=t_tok,
-                             t_fixed=t_fixed, matrix=matrix)
+                             t_fixed=t_fixed, matrix=matrix, source=source)
 
 
 def profiles_from_requests(registry: TenantRegistry, requests, *,
                            total_units: int, units_for=None, max_k: int = 8,
                            t_tok: float = 2e-3, t_fixed: float = 6e-3,
-                           probe=None) -> Dict[str, ServeClassProfile]:
+                           probe=None, store=None,
+                           arch: Optional[str] = None,
+                           backend: Optional[str] = None,
+                           ) -> Dict[str, ServeClassProfile]:
     """One profile per tenant, its class shape read off its request mix.
 
     ``units_for(req) -> int`` maps a request to its cache-unit footprint
     (paged: ``blocks_for(prompt + max_new)``; contiguous: 1 slot).
     ``probe(tenant_id, k) -> tokens/s`` optionally runs the real engine.
+    ``store``/``arch``/``backend`` feed measured rate constants from an
+    ``obs.ProfileStore`` when no probe is given (see ``profile_class``).
     """
     if units_for is None:
         units_for = lambda r: 1
@@ -293,7 +317,7 @@ def profiles_from_requests(registry: TenantRegistry, requests, *,
             total_units=total_units, max_k=max_k, t_tok=t_tok,
             t_fixed=t_fixed,
             probe=(lambda k, tid=t.tenant_id: probe(tid, k)) if probe
-            else None)
+            else None, store=store, arch=arch, backend=backend)
     return profiles
 
 
