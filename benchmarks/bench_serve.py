@@ -105,6 +105,54 @@ def run():
     rows.extend(_tenant_rows())
     rows.extend(_obs_rows(n, max_new))
     rows.extend(_profiled_rows(n, max_new))
+    rows.extend(_chaos_rows(n))
+    return rows
+
+
+def _chaos_rows(n):
+    """Faulted vs fault-free Philly replay at EQUAL pool budget: the same
+    open-loop request set (``serve.replay.philly_requests``) through the
+    same paged engine, once clean and once under a seeded 3-fault schedule
+    (slot kill, prefix flush, pool shrink + restore). The chaos row's
+    ``recovery_s`` is the wall-clock the recovery paths cost on top of the
+    clean run; its gated ``dropped`` field holds the drop count at the
+    recorded baseline (0 — this schedule must stay survivable without
+    giving up work) and both rows gate ``slo_attainment`` over the scored
+    set as a floor. Outputs stay token-identical to the clean run for
+    every non-dropped request (tests/test_chaos.py pins that); the warm
+    measured run replays the identical schedule (``FaultInjector.reset``
+    re-arms per run)."""
+    from repro.serve import FaultInjector, FaultSchedule, philly_requests
+
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    max_len, block, n_blocks = 64, 8, 24
+
+    def reqs():
+        return philly_requests(cfg.vocab_size, n, load=2.0, seed=7,
+                               prompt_len=12, max_new=8, max_len=max_len)
+
+    spec = "slot_kill@2,prefix_flush@4,pool_shrink@6:blocks=6:restore_after=6"
+    rows, walls = [], {}
+    for label, injector in (
+            ("replay-clean", None),
+            ("replay-chaos", FaultInjector(FaultSchedule.from_spec(spec)))):
+        eng = ServeEngine(cfg, max_len=max_len, n_slots=max(2, n // 2),
+                          cache="paged", block_size=block, n_blocks=n_blocks,
+                          injector=injector)
+        _, st = _run_warm(eng, reqs)
+        eng.pool.audit()
+        walls[label] = st.wall_s
+        row = _row(f"serve/{label}/{arch}", st)
+        row["dropped"] = st.dropped
+        row["slo_attainment"] = st.slo_attainment
+        row["derived"] += (f" faults={st.faults_injected} "
+                           f"rec={st.recoveries} drop={st.dropped} "
+                           f"att={st.slo_attainment:.2f}")
+        if label == "replay-chaos":
+            row["derived"] += (f" recovery_s="
+                               f"{st.wall_s - walls['replay-clean']:.3f}")
+        rows.append(row)
     return rows
 
 

@@ -66,7 +66,12 @@ CHECK_FIELDS = {"decode_ms_per_tok": (None, 2.0, "max"),
                 "decode_dispatches": (1.5, 0.0, "max"),
                 "host_syncs": (1.5, 0.0, "max"),
                 "p99_latency_steps": (1.25, 2.0, "max"),
-                "slo_attainment": (1.0, 0.02, "min")}
+                "slo_attainment": (1.0, 0.02, "min"),
+                # chaos-replay rows: requests dropped by fault recovery
+                # (deterministic for a schedule; baseline is 0 — the
+                # recorded schedule must stay survivable without giving
+                # up work, so any fresh drop is a regression).
+                "dropped": (1.0, 0.0, "max")}
 
 
 def _parse_args(argv):
@@ -121,8 +126,9 @@ def _field_breaches(rec, ref, tolerance: float):
                     f"{field} {float(got):.2f} < {float(want):.2f} / "
                     f"{tol:g} - {slack:g}")
             continue
-        if not want:
-            continue            # zero-cost baseline: nothing to scale
+        # a zero baseline can't scale multiplicatively, but the absolute
+        # slack still gates: a dropped=0 baseline breaches on ANY drop,
+        # while wall-clock fields keep their ms floor.
         bound = float(want) * tol + slack
         if float(got) > bound:
             breaches.append(

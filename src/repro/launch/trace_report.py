@@ -20,6 +20,9 @@ the summaries the raw event stream only implies:
     split and the measured-vs-roofline utilization column.
   * **Queue report** — admission wait distribution plus budget_skip /
     defer counts per tenant.
+  * **Fault report** — chaos-replay traces (``launch/replay.py``) carry
+    ``fault_inject`` / ``recover`` events; these are tabulated by fault
+    kind and by recovery action (regenerate / retry / drop / restore).
 
 Flags: ``--json`` emits the full report as one JSON object; ``--buckets``
 sets the timeline resolution; ``--validate`` checks every event against
@@ -34,7 +37,7 @@ import json
 import sys
 from collections import defaultdict
 
-from repro.obs import EVENT_SCHEMA, load_trace, validate_events
+from repro.obs import EVENT_SCHEMA, read_trace, validate_events
 
 
 def _mean(xs):
@@ -200,6 +203,30 @@ def queue_report(events):
             for t, w in sorted(waits.items())}
 
 
+def fault_report(events):
+    """Fault-injection and recovery tables from a chaos-replay trace.
+
+    ``injected`` counts ``fault_inject`` events by kind; ``recoveries``
+    counts ``recover`` events by (fault kind, recovery action); ``drops``
+    is the subset of recoveries whose action was ``drop``. Empty dicts
+    for fault-free traces."""
+    injected = defaultdict(int)
+    recoveries = defaultdict(int)
+    drops = 0
+    for e in events:
+        if e["ev"] == "fault_inject":
+            injected[e["kind"]] += 1
+        elif e["ev"] == "recover":
+            recoveries[(e["kind"], e["action"])] += 1
+            drops += e["action"] == "drop"
+    return {
+        "injected": dict(sorted(injected.items())),
+        "recoveries": [{"kind": k, "action": a, "n": n}
+                       for (k, a), n in sorted(recoveries.items())],
+        "drops": drops,
+    }
+
+
 def build_report(events, n_buckets: int = 8) -> dict:
     """The full analyzer output as one JSON-able dict."""
     meta = next((e for e in events if e["ev"] == "trace_meta"), None)
@@ -219,6 +246,7 @@ def build_report(events, n_buckets: int = 8) -> dict:
         "dispatches": dispatch_summary(body),
         "phase_costs": phase_costs(body),
         "queue": queue_report(body),
+        "faults": fault_report(body),
     }
 
 
@@ -262,6 +290,15 @@ def _print_human(report: dict) -> None:
         print("\npreemptions:")
         for row in report["preemptions"]:
             print(f"  {row['cause']:<16} {row['tenant']:<10} x{row['n']}")
+    f = report.get("faults") or {}
+    if f.get("injected"):
+        print("\nfaults injected:")
+        for kind, n in f["injected"].items():
+            print(f"  {kind:<16} x{n}")
+        print("recoveries:")
+        for row in f["recoveries"]:
+            print(f"  {row['kind']:<16} {row['action']:<12} x{row['n']}")
+        print(f"requests dropped by chaos: {f['drops']}")
     print("\nSLO timeline:")
     if not report["slo_timeline"]:
         print("  (no evictions in trace)")
@@ -288,8 +325,11 @@ def main(argv=None) -> int:
                          "(CI smoke assertion)")
     args = ap.parse_args(argv)
 
-    events = load_trace(args.trace)
+    events, truncated = read_trace(args.trace)
     if args.validate:
+        if truncated:
+            print("warning: final trace line is truncated (writer was "
+                  "interrupted mid-record); it was skipped", file=sys.stderr)
         problems = validate_events(events)
         if problems:
             for p in problems[:20]:

@@ -22,7 +22,7 @@ worked example):
 """
 from repro.obs.chrome import to_chrome_trace, write_chrome_trace
 from repro.obs.events import (EVENT_SCHEMA, NULL_TRACER, SPAN_EVENTS,
-                              NullTracer, Tracer, load_trace,
+                              NullTracer, Tracer, load_trace, read_trace,
                               validate_events)
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                RunObs)
@@ -33,5 +33,6 @@ __all__ = [
     "Counter", "DispatchProfiler", "EVENT_SCHEMA", "Gauge", "Histogram",
     "MetricsRegistry", "NULL_PROFILER", "NULL_TRACER", "NullDispatchProfiler",
     "NullTracer", "ProfileStore", "RunObs", "SPAN_EVENTS", "Tracer",
-    "load_trace", "to_chrome_trace", "validate_events", "write_chrome_trace",
+    "load_trace", "read_trace", "to_chrome_trace", "validate_events",
+    "write_chrome_trace",
 ]

@@ -17,6 +17,7 @@ Track layout (one process, one thread per phase):
     tid 3  pool        block_alloc / block_grow / block_free / prefix_evict
     tid 4  profile     dispatch_profile — utilization counter ("C") tracks
                        per phase, compile dispatches as instants
+    tid 5  chaos       fault_inject / recover instants
 
 ``dispatch_profile`` events (obs/prof.py) render as Chrome COUNTER events:
 one ``util[<phase>]`` counter track per phase carrying the
@@ -42,6 +43,7 @@ _TRACKS = {
     "block_alloc": (3, "pool"), "block_grow": (3, "pool"),
     "block_free": (3, "pool"), "prefix_evict": (3, "pool"),
     "dispatch_profile": (4, "profile"),
+    "fault_inject": (5, "chaos"), "recover": (5, "chaos"),
 }
 
 
@@ -55,6 +57,10 @@ def _name(e: dict) -> str:
         return f"prefill_round[{e.get('lanes')}/{e.get('width')}]"
     if ev == "prefill":
         return f"prefill[req={e.get('req')}]"
+    if ev == "fault_inject":
+        return f"fault[{e.get('kind')}]"
+    if ev == "recover":
+        return f"recover[{e.get('kind')}:{e.get('action')}]"
     return ev
 
 

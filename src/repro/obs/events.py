@@ -28,7 +28,7 @@ from __future__ import annotations
 import json
 import time
 from collections import deque
-from typing import Dict, FrozenSet, List, Optional
+from typing import Dict, FrozenSet, List, Optional, Tuple
 
 #: event taxonomy: type -> exact payload field set (beyond ev/step/t).
 #: Span events additionally carry ``dur_s`` (listed explicitly). The
@@ -55,6 +55,14 @@ EVENT_SCHEMA: Dict[str, FrozenSet[str]] = {
     # a tracer are both attached) -------------------------------------------
     "dispatch_profile": frozenset({"phase", "sig", "dur_s", "compile",
                                    "tokens", "flops", "hbm_bytes", "util"}),
+    # -- fault injection (serve/chaos.py; emitted only with an injector) ----
+    # ``target``: slot id / tenant / None; ``mag``: the kind's magnitude
+    # (blocks revoked, hold steps, burst size, entries flushed).
+    "fault_inject": frozenset({"kind", "target", "mag"}),
+    # a recovery action the engine took for an injected fault: action in
+    # {regenerate, retry, drop, restore, reserve_rescale, noop}; ``req``
+    # is the affected request id (None for pool-wide actions).
+    "recover": frozenset({"kind", "action", "req", "detail"}),
     # -- block pool ---------------------------------------------------------
     "block_alloc": frozenset({"slot", "blocks", "hits"}),
     "block_grow": frozenset({"slot", "blocks"}),
@@ -145,16 +153,36 @@ class Tracer:
                 f.write(json.dumps(e) + "\n")
 
 
+def read_trace(path: str) -> Tuple[List[dict], bool]:
+    """Read a JSONL trace back into event dicts, tolerating a truncated
+    FINAL line — the artifact a crash mid-``dump_jsonl`` leaves behind,
+    exactly the situation a post-mortem reader must survive. Returns
+    ``(events, truncated)``; a malformed line anywhere *else* still
+    raises (that is corruption, not truncation)."""
+    with open(path) as f:
+        lines = [ln.strip() for ln in f]
+    while lines and not lines[-1]:
+        lines.pop()
+    events, truncated = [], False
+    for i, line in enumerate(lines):
+        if not line:
+            continue
+        try:
+            events.append(json.loads(line))
+        except json.JSONDecodeError:
+            if i == len(lines) - 1:
+                truncated = True
+            else:
+                raise
+    return events, truncated
+
+
 def load_trace(path: str) -> List[dict]:
     """Read a JSONL trace back into a list of event dicts (the
-    ``trace_meta`` header, when present, stays at index 0)."""
-    events = []
-    with open(path) as f:
-        for line in f:
-            line = line.strip()
-            if line:
-                events.append(json.loads(line))
-    return events
+    ``trace_meta`` header, when present, stays at index 0). A truncated
+    final line — crash mid-dump — is silently dropped; use ``read_trace``
+    to observe the truncation flag."""
+    return read_trace(path)[0]
 
 
 def validate_events(events, schema: Dict[str, FrozenSet[str]] = EVENT_SCHEMA,

@@ -3,9 +3,12 @@
 See serve/README.md for the architecture.
 """
 from repro.serve.cache import CachePool
+from repro.serve.chaos import (FAULT_KINDS, Fault, FaultInjector,
+                               FaultSchedule)
 from repro.serve.engine import (CACHE_BACKENDS, Request, ServeEngine,
                                 ServeStats, serve_step_fn)
 from repro.serve.paged import BlockManager
+from repro.serve.replay import ReplayResult, philly_requests, run_replay
 from repro.serve.scheduler import (SERVE_POLICIES, ContinuousScheduler,
                                    ServeRequest)
 from repro.serve.sharded import (ServeSharding, make_serve_sharding,
@@ -17,9 +20,12 @@ from repro.serve.tenant import (SLOSlack, ServeClassProfile, Tenant,
 
 __all__ = [
     "BlockManager", "CACHE_BACKENDS", "CachePool", "ContinuousScheduler",
-    "Request", "ServeClassProfile", "ServeEngine", "ServeRequest",
-    "ServeSharding", "ServeStats", "SERVE_POLICIES", "SLOSlack", "Tenant",
-    "TenantAllocation", "TenantAllocator", "TenantRegistry", "TenantShare",
-    "make_serve_sharding", "plan_allocation", "profile_class",
-    "profiles_from_requests", "serve_step_fn", "sharded_engine",
+    "FAULT_KINDS", "Fault", "FaultInjector", "FaultSchedule",
+    "ReplayResult", "Request", "ServeClassProfile", "ServeEngine",
+    "ServeRequest", "ServeSharding", "ServeStats", "SERVE_POLICIES",
+    "SLOSlack", "Tenant", "TenantAllocation", "TenantAllocator",
+    "TenantRegistry", "TenantShare", "make_serve_sharding",
+    "philly_requests", "plan_allocation", "profile_class",
+    "profiles_from_requests", "run_replay", "serve_step_fn",
+    "sharded_engine",
 ]

@@ -136,14 +136,19 @@ class ServeStats:
     mean_latency_s: float
     max_active: int = 0               # peak concurrently-decoding requests
     # -- completion accounting -------------------------------------------------
-    unfinished: int = 0               # requests that never finished (or
-                                      # finished without wall-clock stamps —
-                                      # e.g. evicted at driver shutdown);
-                                      # they count as SLO misses so drops
-                                      # can never inflate attainment
-    slo_attainment: float = 1.0       # fraction of ALL requests meeting
-                                      # their tenant's SLO (1.0 when no
-                                      # tenant carries one)
+    unfinished: int = 0               # NON-dropped requests that never
+                                      # finished (or finished without
+                                      # wall-clock stamps — e.g. evicted at
+                                      # driver shutdown); they count as SLO
+                                      # misses so silent losses can never
+                                      # inflate attainment
+    slo_attainment: float = 1.0       # fraction of NON-dropped requests
+                                      # meeting their tenant's SLO (1.0 when
+                                      # no tenant carries one). Dropped
+                                      # requests are excluded from the
+                                      # denominator — and surfaced in
+                                      # ``dropped`` — so injected kills can
+                                      # neither inflate nor deflate it.
     #: per-tenant latency + SLO summary (tenant id -> dict with
     #: p50/p99_latency_steps, p50/p99_latency_s, slo_attainment,
     #: n_requests, unfinished, preemptions) — None without tenant tags
@@ -178,6 +183,15 @@ class ServeStats:
     # -- dispatch profiling (obs.prof; 0.0 with profiling off) -----------------
     decode_util: float = 0.0          # mean measured-vs-roofline utilization
                                       # over execute decode dispatches
+    # -- fault injection (serve/chaos.py; all 0 without an injector) -----------
+    faults_injected: int = 0          # faults applied at horizon boundaries
+    recoveries: int = 0               # recovery actions taken (regenerate /
+                                      # retry / restore / rescale / drop)
+    dropped: int = 0                  # requests given up on by a recovery
+                                      # path (bounded retries exhausted, or
+                                      # the shrunken pool can never hold
+                                      # them) — counted SEPARATELY from
+                                      # unfinished
 
 
 @dataclass
@@ -332,7 +346,8 @@ class ServeEngine:
                  eos_token: Optional[int] = None,
                  tenants: Optional[TenantRegistry] = None,
                  allocation: Optional[TenantAllocation] = None,
-                 tracer=None, metrics_every: int = 1, profiler=None):
+                 tracer=None, metrics_every: int = 1, profiler=None,
+                 injector=None, max_admit_retries: int = 4):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -371,6 +386,16 @@ class ServeEngine:
         #: boundaries (0 disables the series; the gauges still update, so
         #: the stats' queue/occupancy summaries survive via the fallback).
         self.metrics_every = max(int(metrics_every), 0)
+        #: fault injector (chaos.FaultInjector) — None in production runs.
+        #: With one installed the engine polls it at every horizon
+        #: boundary, applies due faults, audits block conservation after
+        #: each, and swaps its crash-on-exhaustion paths for graceful
+        #: degradation (bounded retry-with-backoff, then drop).
+        self.injector = injector
+        self.max_admit_retries = max(int(max_admit_retries), 1)
+        #: the most recent run's cache pool (set by ``run``): the audit
+        #: surface for chaos tests and replay harnesses.
+        self.pool = None
         if policy == "slo" and tenants is None:
             raise ValueError("policy='slo' needs a TenantRegistry "
                              "(tenants=...) to compute slack")
@@ -603,6 +628,12 @@ class ServeEngine:
         """Serve ``requests`` to completion; returns (requests, stats)."""
         reqs = list(requests)
         n_slots = self.n_slots if self.n_slots else max(len(reqs), 1)
+        if self.injector is not None:
+            # re-arm per run: warm-up double-runs and determinism checks
+            # must replay identical chaos (same schedule, same RNG stream)
+            self.injector.bind(vocab_size=self.cfg.vocab_size,
+                               max_len=self.max_len, n_slots=n_slots)
+            self.injector.reset()
         c = RunObs(self.tracer)
         tr = c.tracer
         if tr:
@@ -653,14 +684,16 @@ class ServeEngine:
             return None
         out = {}
         for tid in tids:
-            rs = [r for r in reqs if r.tenant == tid]
+            all_rs = [r for r in reqs if r.tenant == tid]
+            rs = [r for r in all_rs if not r.dropped]   # scored set
             steps = [r.latency_steps for r in rs if self._finished(r)]
             walls = [r.latency_s for r in rs if self._finished(r)]
             t = self.tenants.get(tid) if self.tenants is not None else None
             met = sum(1 for r in rs if self._meets_slo(r))
             out[tid] = {
-                "n_requests": len(rs),
+                "n_requests": len(all_rs),
                 "unfinished": sum(1 for r in rs if not self._finished(r)),
+                "dropped": len(all_rs) - len(rs),
                 "preemptions": sum(r.n_preempted for r in rs),
                 "p50_latency_steps": (float(np.percentile(steps, 50))
                                       if steps else 0.0),
@@ -687,7 +720,13 @@ class ServeEngine:
         steps = int(m.value("steps"))
         rows_possible = steps * n_slots
         hit, total = int(m.value("prefix_hits")), int(m.value("prefix_total"))
-        met = sum(1 for r in reqs if self._meets_slo(r))
+        # fault-dropped requests leave the scored set entirely: they are
+        # counted in ``dropped``, not ``unfinished``, and excluded from
+        # slo_attainment's denominator — an injected kill must neither
+        # inflate attainment (drop the misses) nor deflate it (score
+        # requests the injector made unservable).
+        scored = [r for r in reqs if not r.dropped]
+        met = sum(1 for r in scored if self._meets_slo(r))
         qd_mean, qd_max = m.series_stats("queue_depth")
         occ_mean, occ_max = m.series_stats("occupancy")
         stats = ServeStats(
@@ -715,8 +754,11 @@ class ServeEngine:
             prefix_blocks_total=total,
             prefix_blocks_hit=hit,
             prefix_hit_rate=hit / total if total else 0.0,
-            unfinished=sum(1 for r in reqs if not self._finished(r)),
-            slo_attainment=met / len(reqs) if reqs else 1.0,
+            unfinished=sum(1 for r in scored if not self._finished(r)),
+            slo_attainment=met / len(scored) if scored else 1.0,
+            faults_injected=int(m.value("faults_injected")),
+            recoveries=int(m.value("recoveries")),
+            dropped=len(reqs) - len(scored),
             tenants=self._tenant_stats(reqs),
             mean_queue_depth=qd_mean,
             max_queue_depth=int(qd_max),
@@ -791,6 +833,169 @@ class ServeEngine:
                         met=self._meets_slo(r))
         return out
 
+    # -- fault injection + recovery (serve/chaos.py) ---------------------------
+    def _fault_hold(self, sched):
+        """The admission-hold hook (``tenant_slowdown`` / ``defer_storm``
+        windows): None — the common case — costs the scheduler nothing."""
+        inj = self.injector
+        if inj is None or not inj.has_holds(sched.step):
+            return None
+        return lambda r: inj.hold_cause(r, sched.step)
+
+    def _drop(self, sched, req, c: RunObs, cause: str) -> None:
+        """Give up on a waiting request (a recovery path exhausted): it
+        leaves the queue with ``dropped`` set so stats score it separately
+        from unfinished work."""
+        if req in sched.waiting:
+            sched.waiting.remove(req)
+        req.dropped = True
+        req.drop_cause = cause
+        c.inc("recoveries")
+        if c.tracer:
+            c.tracer.emit("recover", kind=cause, action="drop",
+                          req=req.job_id, detail=req.n_retries)
+
+    def _can_ever_admit(self, pool, req) -> bool:
+        """Whether the CURRENT pool capacity could ever admit ``req`` —
+        the difference between "wait for blocks to free" (retry) and "the
+        shrunken pool will never hold it" (drop). Mirrors
+        ``validate_request``'s arithmetic against the live ``n_blocks``.
+        Conservative on prefix hits: a request droppable by this rule
+        might have admitted via cached blocks, but bounded retries have
+        already been burned by then."""
+        if not hasattr(pool, "blocks_for"):
+            return True                      # contiguous slots never shrink
+        need = len(req.prompt) + req.max_new_tokens
+        return (pool.blocks_for(need) <= pool.n_blocks
+                and pool.blocks_for(len(req.prompt)) + pool.watermark_blocks
+                <= pool.n_blocks)
+
+    def _chaos_admission(self, sched, pool, c: RunObs) -> None:
+        """Bounded retry-with-backoff for waiting requests a ``pool_shrink``
+        left unservable: each due retry re-checks capacity (a restore
+        resets the clock), backs off exponentially, and after
+        ``max_admit_retries`` the request drops instead of wedging the
+        queue forever."""
+        for r in list(sched.waiting):
+            if r.arrival_time > sched.step:
+                continue
+            if self._can_ever_admit(pool, r):
+                r.n_retries = 0              # capacity is back: clean slate
+                continue
+            if sched.step < r.next_retry:
+                continue
+            r.n_retries += 1
+            if r.n_retries > self.max_admit_retries:
+                self._drop(sched, r, c, cause="pool_shrink")
+                continue
+            r.next_retry = sched.step + float(2 ** r.n_retries)
+            c.inc("recoveries")
+            if c.tracer:
+                c.tracer.emit("recover", kind="pool_shrink", action="retry",
+                              req=r.job_id, detail=r.n_retries)
+
+    def _next_unblock(self, sched) -> Optional[float]:
+        """The earliest future step at which a stalled queue could move
+        again: an arrival, a hold release, a pending fault, or a backoff
+        retry — where the idle clock jumps to instead of crashing when
+        chaos has made every waiting request momentarily inadmissible."""
+        cands = [r.arrival_time for r in sched.waiting
+                 if r.arrival_time > sched.step]
+        cands += [r.next_retry for r in sched.waiting
+                  if r.next_retry > sched.step]
+        inj = self.injector
+        if inj is not None:
+            for s in (inj.release_step(sched.step),
+                      inj.next_fault_step(sched.step)):
+                if s is not None and s > sched.step:
+                    cands.append(s)
+        return min(cands, default=None)
+
+    def _apply_faults(self, sched, pool, state, c: RunObs, n_slots: int,
+                      reqs: List[ServeRequest]) -> None:
+        """Apply every due fault at this boundary, then audit block
+        conservation (paged) — a fault that corrupts pool accounting must
+        fail HERE, at the injection site, not decodes later."""
+        for f in self.injector.due(sched.step):
+            self._apply_fault(f, sched, pool, state, c, n_slots, reqs)
+            self.injector.injected.append((f.kind, float(sched.step)))
+            c.inc("faults_injected")
+            if isinstance(pool, BlockManager):
+                pool.audit()
+
+    def _apply_fault(self, f, sched, pool, state, c: RunObs, n_slots: int,
+                     reqs: List[ServeRequest]) -> None:
+        tr = c.tracer
+        inj = self.injector
+        paged = isinstance(pool, BlockManager)
+        if f.kind == "pool_shrink":
+            took = pool.shrink(f.blocks) if paged else 0
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=None, mag=took)
+            if took and f.restore_after is not None:
+                inj.defer_restore(f, float(sched.step), took)
+            if took and self.allocation is not None:
+                pool.tenant_reserves = self.allocation.rescaled_reserves(
+                    pool.n_blocks)
+                c.inc("recoveries")
+                if tr:
+                    tr.emit("recover", kind=f.kind, action="reserve_rescale",
+                            req=None, detail=sum(
+                                pool.tenant_reserves.values()))
+        elif f.kind == "pool_restore":
+            got = pool.expand(f.blocks) if paged else 0
+            if got and self.allocation is not None:
+                pool.tenant_reserves = self.allocation.rescaled_reserves(
+                    pool.n_blocks)
+            c.inc("recoveries")
+            if tr:
+                tr.emit("recover", kind="pool_shrink", action="restore",
+                        req=None, detail=got)
+        elif f.kind == "slot_kill":
+            slot = inj.pick_slot(list(sched.active), f.slot)
+            if slot is None:
+                if tr:
+                    tr.emit("fault_inject", kind=f.kind, target=None, mag=0)
+                return
+            victim = sched.active[slot]
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=slot, mag=1)
+            # the device state is declared lost: preempt-and-regenerate is
+            # exactly the recovery — blocks freed, the row frozen, tokens
+            # regenerated identically after re-admission (deterministic
+            # prefill + greedy decode), so outputs stay token-identical.
+            sched.preempt(victim, cause="slot_kill")
+            state.freeze([slot])
+            c.inc("preemptions")
+            c.inc("recoveries")
+            if tr:
+                tr.emit("recover", kind=f.kind, action="regenerate",
+                        req=victim.job_id, detail=victim.n_preempted)
+        elif f.kind in ("tenant_slowdown", "defer_storm"):
+            tenant = f.tenant if f.kind == "tenant_slowdown" else None
+            inj.hold(tenant, float(sched.step) + f.duration)
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=tenant,
+                        mag=f.duration)
+        elif f.kind == "arrival_burst":
+            burst = inj.burst_requests(f)
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=f.tenant,
+                        mag=len(burst))
+            for r in burst:
+                r.job_id = len(reqs)
+                r.arrival_time = float(sched.step)
+                reqs.append(r)          # stats score the injected load too
+                try:
+                    sched.submit(r)
+                except ValueError:      # can never fit this pool: drop at
+                    self._drop(sched, r, c, cause="burst_unservable")
+        elif f.kind == "prefix_flush":
+            flushed = pool.flush_prefix() if paged else 0
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=None,
+                        mag=flushed)
+
     def _could_admit_arrival(self, sched) -> bool:
         """Whether shortening the horizon for the next arrival could pay
         off: the pool must actually be able to admit a waiting request —
@@ -835,6 +1040,13 @@ class ServeEngine:
             urgent = min(self._slack(r, sched.step) for r in sched.waiting)
             if math.isfinite(urgent):
                 h = max(1, min(h, int(max(1.0, urgent))))
+        if self.injector is not None:
+            # land the next boundary on the next pending fault, so a fault
+            # keyed to step s applies at the first boundary >= s instead
+            # of drifting up to a full horizon late.
+            nf = self.injector.next_fault_step(sched.step)
+            if nf is not None and nf > sched.step:
+                h = max(1, min(h, int(math.ceil(nf - sched.step))))
         return _pow2_floor(h)
 
     def _decode_boundary(self, sched, pool, state, c, n_slots, dmult,
@@ -919,7 +1131,7 @@ class ServeEngine:
         return counts
 
     def _run_contiguous(self, reqs, n_slots, c: RunObs):
-        pool = CachePool(self.model, n_slots, self.max_len)
+        self.pool = pool = CachePool(self.model, n_slots, self.max_len)
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
@@ -935,8 +1147,12 @@ class ServeEngine:
                  if self.sharding is not None else 1)
 
         while sched.has_work:
+            if self.injector is not None:
+                self._apply_faults(sched, pool, state, c, n_slots, reqs)
             self._evict(sched, state, c)
-            sched.admit()
+            sched.admit(hold=self._fault_hold(sched))
+            if self.injector is not None:
+                self._chaos_admission(sched, pool, c)
             admitted = sched.drain_prefill()
             t0 = time.perf_counter()
             for r in admitted:
@@ -975,6 +1191,11 @@ class ServeEngine:
                 nxt = sched.next_arrival()
                 if nxt is None:
                     break
+                if self.injector is not None and nxt <= sched.step:
+                    # everything waiting is held (a slowdown/storm window):
+                    # jump to the next event that could unstall admission.
+                    unb = self._next_unblock(sched)
+                    nxt = unb if unb is not None else sched.step + 1
                 sched.step = max(sched.step + 1, int(math.ceil(nxt)))
                 if tr:
                     tr.step = sched.step
@@ -1144,9 +1365,18 @@ class ServeEngine:
             if blocked is None:
                 return h, len(victims), victims
             if len(sched.active) == 1:
-                raise RuntimeError(
-                    "paged KV pool exhausted with a single active request; "
-                    "grow n_blocks or lower max_new_tokens")
+                if self.injector is None:
+                    raise RuntimeError(
+                        "paged KV pool exhausted with a single active "
+                        "request; grow n_blocks or lower max_new_tokens")
+                # graceful horizon degradation: the budget vanished mid-
+                # horizon (pool_shrink) under the LAST active request —
+                # drop it instead of crashing the run.
+                victim = sched.active[blocked]
+                victims.append(victim.slot)
+                sched.preempt(victim, cause="pool_exhausted")
+                self._drop(sched, victim, c, cause="pool_exhausted")
+                return h, len(victims), victims
             # victim choice: with a tenant registry the LARGEST SLO slack
             # goes first (a batch tenant without an SLO has infinite
             # slack), so pool pressure lands on whoever can absorb the
@@ -1162,12 +1392,14 @@ class ServeEngine:
             sched.preempt(victim, cause="pool_pressure")
 
     def _run_paged(self, reqs, n_slots, c: RunObs):
-        pool = BlockManager(self.model, n_slots, self.max_len,
-                            block_size=self.block_size,
-                            n_blocks=self.n_blocks,
-                            watermark=self.watermark,
-                            prefix_cache=self.prefix_cache,
-                            tracer=self.tracer)
+        #: the pool outlives the run on ``self.pool`` so chaos tests and
+        #: replay harnesses can audit block conservation after the fact
+        self.pool = pool = BlockManager(self.model, n_slots, self.max_len,
+                                        block_size=self.block_size,
+                                        n_blocks=self.n_blocks,
+                                        watermark=self.watermark,
+                                        prefix_cache=self.prefix_cache,
+                                        tracer=self.tracer)
         if self.sharding is not None:
             pool.buffers = jax.device_put(pool.buffers,
                                           self.sharding.cache_sharding)
@@ -1191,8 +1423,12 @@ class ServeEngine:
                  if self.sharding is not None else 1)
 
         while sched.has_work:
+            if self.injector is not None:
+                self._apply_faults(sched, pool, state, c, n_slots, reqs)
             self._evict(sched, state, c)
-            sched.admit()
+            sched.admit(hold=self._fault_hold(sched))
+            if self.injector is not None:
+                self._chaos_admission(sched, pool, c)
             admitted = sched.drain_prefill()
             if admitted:
                 t0 = time.perf_counter()
@@ -1219,9 +1455,17 @@ class ServeEngine:
                 if nxt is None:
                     break
                 if not admitted and nxt <= sched.step:
-                    raise RuntimeError(
-                        "paged KV pool cannot admit any waiting request; "
-                        "grow n_blocks or lower the watermark")
+                    if self.injector is None:
+                        raise RuntimeError(
+                            "paged KV pool cannot admit any waiting request; "
+                            "grow n_blocks or lower the watermark")
+                    # graceful degradation: a shrink/hold made everything
+                    # momentarily inadmissible — advance to the next event
+                    # that could unstall (hold release, backoff retry,
+                    # pending fault, later arrival); retries bound the
+                    # stall, dropping what the pool can never hold.
+                    unb = self._next_unblock(sched)
+                    nxt = unb if unb is not None else sched.step + 1
                 sched.step = max(sched.step + 1, int(math.ceil(nxt)))
                 if tr:
                     tr.step = sched.step
@@ -1236,6 +1480,8 @@ class ServeEngine:
                                                     stop_np, h, c)
             c.inc("preemptions", n_pre)
             state.freeze(victims)
+            if not sched.active:    # chaos: sole request dropped on
+                continue            # exhaustion — back to admission
             # delta-sync the device table mirror: only rows dirtied by
             # admission / growth (freed rows stay stale — they are frozen
             # and write-masked, so the staleness is unobservable).

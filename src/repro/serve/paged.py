@@ -57,12 +57,17 @@ class _PrefixEntry:
     the block's K/V (``commit_block``); a hit on an unready entry defers the
     hitting request instead of reading half-written content. ``state`` is
     the family's cross-chunk prefill carry *after* this block (MoE expert
-    counts; None for dense/vlm).
+    counts; None for dense/vlm). ``retired`` marks an entry force-flushed
+    (``flush_prefix``) while still referenced: it stays for refcounting but
+    is unhittable, and its block is released when the last holder frees —
+    deleting it outright would double-free the block (every sharer's
+    ``free`` would see a private block and return it to the free list).
     """
     block: int
     refs: int = 0
     ready: bool = False
     state: object = field(default=None, repr=False)
+    retired: bool = False
 
 
 class BlockManager:
@@ -95,7 +100,14 @@ class BlockManager:
         #: default pool capacity == the contiguous pool's token capacity
         self.n_blocks = (n_blocks if n_blocks is not None
                          else n_slots * self.max_blocks)
+        self.watermark = float(watermark)   # fraction; re-applied on shrink
         self.watermark_blocks = math.ceil(watermark * self.n_blocks)
+        #: fault injection (chaos.FaultInjector pool_shrink): blocks revoked
+        #: from the pool mid-run, a deficit still owed from in-use blocks,
+        #: and the buffer capacity audits reconcile against.
+        self._revoked: List[int] = []
+        self._revoke_deficit = 0
+        self._total_blocks = self.n_blocks
         #: per-tenant watermark headroom (tenant.TenantAllocation.reserves):
         #: when set, a tenant admitting must keep only the OTHER tenants'
         #: reserve free — its own headroom is admission-spendable, so
@@ -183,6 +195,16 @@ class BlockManager:
             self.tracer.emit("prefix_evict", blocks=1)
         return self._entries.pop(h).block
 
+    def _release_block(self, blk: int) -> None:
+        """Return a block to the pool — or to a pending revocation: after a
+        ``shrink`` that could not find enough idle blocks, the deficit is
+        collected here as in-use blocks come back."""
+        if self._revoke_deficit > 0:
+            self._revoke_deficit -= 1
+            self._revoked.append(blk)
+        else:
+            self._free_blocks.append(blk)
+
     # -- admission -----------------------------------------------------------
     def validate_request(self, req) -> None:
         """Reject requests that can never run on this pool."""
@@ -240,7 +262,7 @@ class BlockManager:
         n = len(req.prompt)
         need = self.blocks_for(n)
         hashes: List[int] = []
-        hits = 0
+        hits = revived = 0
         self.deferred_last_alloc = False
         if self.prefix_cache:
             # the chain is pure content: memoize it on the (immutable-prompt)
@@ -255,7 +277,7 @@ class BlockManager:
             hit_cap = (n - 1) // self.block_size
             for idx, h in enumerate(hashes[:hit_cap]):
                 e = self._entries.get(h)
-                if e is None:
+                if e is None or e.retired:   # retired = flushed, unhittable
                     break
                 if not e.ready:
                     # donor mid-prefill: join next round (the scheduler may
@@ -263,9 +285,14 @@ class BlockManager:
                     self.deferred_last_alloc = True
                     return None
                 hits += 1
+                # a refcount-0 hit revives a block ``free_blocks`` counts
+                # as available: it costs no NEW block but still shrinks
+                # availability, so charge it or the private-suffix take
+                # below can run the pool dry mid-allocation.
+                revived += e.refs == 0
         if (not self._free_slots
                 or not self._blocks_clear_watermark(
-                    need - hits, getattr(req, "tenant", None))):
+                    need - hits + revived, getattr(req, "tenant", None))):
             return None
         slot = self._free_slots.popleft()
         self._in_use.add(slot)
@@ -377,13 +404,14 @@ class BlockManager:
                 n_shared += 1
                 e.refs -= 1
                 if e.refs == 0:
-                    if e.ready:
+                    if e.ready and not e.retired:
                         self._evictable[h] = None
-                    else:       # owner bailed before writing: unservable
+                    else:   # owner bailed before writing, or force-flushed
+                        # at nonzero refcount: unservable either way
                         del self._entries[h]
-                        self._free_blocks.append(blk)
+                        self._release_block(blk)
             else:
-                self._free_blocks.append(blk)
+                self._release_block(blk)
         self.tables[slot] = -1
         self._dirty_slots.add(slot)
         self._lengths[slot] = 0
@@ -393,6 +421,140 @@ class BlockManager:
         if self.tracer:
             self.tracer.emit("block_free", slot=slot, blocks=n_freed,
                              shared=n_shared)
+
+    # -- fault injection (chaos.FaultInjector recovery surface) --------------
+    def shrink(self, n: int) -> int:
+        """Revoke up to ``n`` blocks of capacity mid-run (a ``pool_shrink``
+        fault: a co-tenant claims the memory). Idle blocks go first — the
+        free list, then evictable cached blocks (their entries dropped) —
+        and any remainder becomes a *deficit* collected as in-use blocks
+        free (``_release_block``). Capacity accounting (``n_blocks``, the
+        watermark) rescales immediately, so admission decisions see the
+        shrunken pool at once; per-tenant reserves are the engine's to
+        rescale (``TenantAllocation.rescaled_reserves``). At least one
+        block of capacity always survives. Returns the blocks revoked."""
+        take = max(0, min(int(n), self.n_blocks - 1))
+        got = 0
+        while got < take and (self._free_blocks or self._evictable):
+            self._revoked.append(self._take_block())
+            got += 1
+        self._revoke_deficit += take - got
+        self.n_blocks -= take
+        self.watermark_blocks = math.ceil(self.watermark * self.n_blocks)
+        return take
+
+    def expand(self, n: int) -> int:
+        """Return up to ``n`` previously revoked blocks (``pool_restore``).
+        Deficit cancels first — those blocks never actually left the
+        tables — then physically revoked blocks rejoin the free list."""
+        give = min(int(n), len(self._revoked) + self._revoke_deficit)
+        cancel = min(give, self._revoke_deficit)
+        self._revoke_deficit -= cancel
+        for _ in range(give - cancel):
+            self._free_blocks.append(self._revoked.pop())
+        self.n_blocks += give
+        self.watermark_blocks = math.ceil(self.watermark * self.n_blocks)
+        return give
+
+    def flush_prefix(self) -> int:
+        """Force-evict the prefix cache (a ``prefix_flush`` fault).
+        Refcount-0 entries release their blocks immediately; entries still
+        referenced by live requests are *retired* — unhittable for future
+        admissions, their blocks released when the last holder frees.
+        Returns entries flushed (freed + retired)."""
+        freed = 0
+        for h in list(self._evictable):
+            del self._evictable[h]
+            self._release_block(self._entries.pop(h).block)
+            freed += 1
+        retired = 0
+        for e in self._entries.values():
+            if not e.retired:
+                e.retired = True
+                retired += 1
+        if freed and self.tracer:
+            self.tracer.emit("prefix_evict", blocks=freed)
+        return freed + retired
+
+    def audit(self) -> Dict[str, int]:
+        """Block-conservation check: every block the pool was built with is
+        in exactly ONE of {free list, revoked, a table (counted once across
+        sharers), evictable cache}, modulo the outstanding revocation
+        deficit (those blocks sit in tables, owed). Also checks refcount
+        agreement (an entry's refs equals its block's table multiplicity)
+        and slot/table consistency. Raises RuntimeError on any violation —
+        the engine asserts this after every injected fault — and returns a
+        summary dict when clean."""
+        problems: List[str] = []
+        free = list(self._free_blocks)
+        free_set = set(free)
+        if len(free_set) != len(free):
+            problems.append(f"duplicate blocks in the free list: {free}")
+        revoked_set = set(self._revoked)
+        if len(revoked_set) != len(self._revoked):
+            problems.append(f"duplicate revoked blocks: {self._revoked}")
+        if free_set & revoked_set:
+            problems.append(f"free∩revoked: {sorted(free_set & revoked_set)}")
+        # table multiplicity per block; idle slots must have empty tables
+        table_refs: Dict[int, int] = {}
+        for slot in range(self.n_slots):
+            row = self.tables[slot]
+            if slot not in self._in_use:
+                if (row >= 0).any():
+                    problems.append(f"idle slot {slot} holds table blocks")
+                continue
+            for blk in row[row >= 0]:
+                table_refs[int(blk)] = table_refs.get(int(blk), 0) + 1
+        table_set = set(table_refs)
+        for name, other in (("free", free_set), ("revoked", revoked_set)):
+            if table_set & other:
+                problems.append(
+                    f"table∩{name}: {sorted(table_set & other)}")
+        # entry <-> table refcount agreement
+        entry_blocks: Dict[int, int] = {}
+        for h, e in self._entries.items():
+            if e.block in entry_blocks:
+                problems.append(f"two entries share block {e.block}")
+            entry_blocks[e.block] = e.refs
+            if e.refs != table_refs.get(e.block, 0):
+                problems.append(
+                    f"entry {h:#x} refs={e.refs} but block {e.block} has "
+                    f"table multiplicity {table_refs.get(e.block, 0)}")
+            if e.refs == 0 and h not in self._evictable:
+                problems.append(
+                    f"refcount-0 entry {h:#x} not in the evictable FIFO")
+        for blk, cnt in table_refs.items():
+            if cnt > 1 and blk not in entry_blocks:
+                problems.append(
+                    f"block {blk} shared by {cnt} tables without an entry")
+        evict_blocks = {self._entries[h].block for h in self._evictable
+                        if h in self._entries}
+        missing = set(self._evictable) - set(self._entries)
+        if missing:
+            problems.append(f"evictable hashes without entries: "
+                            f"{[hex(h) for h in missing]}")
+        # the conservation sum: deficit blocks live in tables, still owed
+        accounted = (len(free_set) + len(revoked_set) + len(table_set)
+                     + len(evict_blocks - table_set))
+        if accounted != self._total_blocks:
+            problems.append(
+                f"{accounted} blocks accounted for "
+                f"(free={len(free_set)} revoked={len(revoked_set)} "
+                f"table={len(table_set)} evictable={len(evict_blocks)}) "
+                f"of {self._total_blocks}")
+        if (self.n_blocks + len(self._revoked) + self._revoke_deficit
+                != self._total_blocks):
+            problems.append(
+                f"capacity arithmetic broken: n_blocks={self.n_blocks} "
+                f"+ revoked={len(self._revoked)} "
+                f"+ deficit={self._revoke_deficit} != {self._total_blocks}")
+        if problems:
+            raise RuntimeError("block audit failed:\n  "
+                               + "\n  ".join(problems))
+        return {"free": len(free_set), "revoked": len(revoked_set),
+                "deficit": self._revoke_deficit, "in_table": len(table_set),
+                "evictable": len(evict_blocks),
+                "capacity": self.n_blocks}
 
     # -- decode-step views ---------------------------------------------------
     def table_rows(self, slots) -> np.ndarray:
@@ -423,4 +585,6 @@ class BlockManager:
                 0.0, 1.0 - used_tokens / allocated) if allocated else 0.0,
             "prefix_blocks_total": self.prefix_blocks_total,
             "prefix_blocks_hit": self.prefix_blocks_hit,
+            "revoked_blocks": len(self._revoked),
+            "revoke_deficit": self._revoke_deficit,
         }

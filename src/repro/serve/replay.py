@@ -1,0 +1,120 @@
+"""Open-loop trace replay: Philly-derived arrivals through the serve engine.
+
+The replay half of ROADMAP item 5: ``core.trace`` generates Synergy's §5.1
+workload — Philly GPU-demand mix, heavy-tailed 10^x-minute durations,
+Poisson arrivals — and this module maps those *training jobs* onto
+*serving requests* deterministically, so the serve engine faces the same
+arrival process the paper's scheduler does:
+
+  * **arrival step**: the job's Poisson arrival, generated at
+    ``jobs_per_hour = 3600 * load`` so one trace-second equals one decode
+    step and the mean arrival rate is ``load`` requests/step (open loop:
+    arrivals do not wait for completions).
+  * **prompt length**: scaled by the job's GPU demand (bigger jobs carry
+    bigger prompts) — demand g in {1..16} maps to [prompt_len/2,
+    prompt_len] via log2(g)/4.
+  * **generation budget**: scaled by the job's duration decade — the
+    10^1.5..10^4-minute range maps onto [1, max_new].
+
+Everything is a pure function of ``seed``, which is what lets a chaos
+replay (``serve.chaos.FaultInjector``) assert determinism: the same
+(workload seed, fault schedule) pair produces the same event trace twice.
+
+``run_replay`` drives a prebuilt engine over the request set and — with
+``verify=True`` — re-runs every NON-dropped request (including any the
+injector burst in) on the fault-free reference: a single-device static
+contiguous engine at ``decode_horizon=1``. Token identity against that
+reference is the exactness invariant under chaos; dropped requests are
+exempt (they produced no output) but are reported separately.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import numpy as np
+
+from repro.core import trace as core_trace
+from repro.serve.scheduler import ServeRequest
+
+
+def philly_requests(vocab_size: int, n: int, load: float = 2.0,
+                    seed: int = 7, prompt_len: int = 12, max_new: int = 8,
+                    max_len: int = 64,
+                    tenant_of=None) -> List[ServeRequest]:
+    """Deterministic Philly-derived request set (see module docstring).
+
+    ``tenant_of`` optionally maps a ``core.job.Job`` to a tenant id (e.g.
+    multi-GPU jobs to the batch tenant); default leaves every request on
+    the "default" tenant."""
+    if load <= 0:
+        raise ValueError("load must be > 0 requests/step")
+    jobs = core_trace.philly_trace(n_jobs=n, seed=seed,
+                                   jobs_per_hour=3600.0 * load)
+    rng = np.random.default_rng(seed)
+    cap = max(1, min(prompt_len, max_len - max_new))
+    reqs: List[ServeRequest] = []
+    for job in jobs:
+        # GPU demand (1..16, Philly mix) -> prompt scale in [0.5, 1.0]
+        scale = 0.5 + 0.5 * math.log2(max(job.gpu_demand, 1)) / 4.0
+        p = max(1, min(cap, int(round(cap * scale))))
+        # duration decade (10^1.5 .. 10^4 minutes) -> budget in [1, max_new]
+        decade = math.log10(max(job.duration / 60.0, 1.0))
+        m = max(1, min(max_new,
+                       int(round(max_new * (decade - 1.5) / 2.5))))
+        toks = rng.integers(1, max(2, vocab_size), size=p).astype(np.int32)
+        reqs.append(ServeRequest(
+            prompt=toks, max_new_tokens=m,
+            arrival_time=float(job.arrival_time),
+            tenant=tenant_of(job) if tenant_of is not None else "default"))
+    return reqs
+
+
+@dataclass
+class ReplayResult:
+    """One replay's outcome: the served requests (burst arrivals included),
+    the run stats, the injected-fault log, and — when asked for — the
+    verdict of the fault-free reference check."""
+    requests: List[ServeRequest]
+    stats: object
+    faults: List[tuple] = field(default_factory=list)
+    verified: Optional[bool] = None
+    mismatched: List[int] = field(default_factory=list)
+    dropped: List[int] = field(default_factory=list)
+
+
+def run_replay(engine, requests: List[ServeRequest], *,
+               verify: bool = False, ref_cfg=None,
+               ref_max_len: Optional[int] = None) -> ReplayResult:
+    """Drive ``engine`` over ``requests``; optionally verify against the
+    fault-free K=1 single-device reference.
+
+    ``ref_cfg`` is the ORIGINAL arch config (pre paged-rewrite) the
+    reference engine is built from; required when ``verify=True``. The
+    reference serves every non-dropped request — originals and injected
+    bursts alike — statically (a slot per request, all arrivals at 0), so
+    the check isolates token content from scheduling order."""
+    out, stats = engine.run(requests)
+    res = ReplayResult(
+        requests=out, stats=stats,
+        faults=(list(engine.injector.injected)
+                if getattr(engine, "injector", None) is not None else []),
+        dropped=[r.job_id for r in out if r.dropped])
+    if not verify:
+        return res
+    if ref_cfg is None:
+        raise ValueError("verify=True needs ref_cfg (the unmodified arch "
+                         "config for the reference engine)")
+    from repro.serve.engine import ServeEngine
+    scored = [r for r in out if not r.dropped]
+    ref_engine = ServeEngine(ref_cfg,
+                             max_len=ref_max_len or engine.max_len,
+                             decode_horizon=1, eos_token=engine.eos_token)
+    refs = [ServeRequest(np.asarray(r.prompt).copy(),
+                         max_new_tokens=r.max_new_tokens) for r in scored]
+    refs, _ = ref_engine.run(refs)
+    res.mismatched = [r.job_id for r, ref in zip(scored, refs)
+                      if r.output != ref.output]
+    res.verified = not res.mismatched
+    return res

@@ -54,6 +54,17 @@ class ServeRequest:
     #: times this request was preempted under pool pressure (each bounce
     #: regenerates its tokens identically after re-admission)
     n_preempted: int = 0
+    # -- fault recovery (serve/chaos.py; all idle without an injector) ------
+    #: admission retries burned after a pool_shrink left the request
+    #: unservable (bounded retry-with-backoff), and the step the next
+    #: retry is due at
+    n_retries: int = 0
+    next_retry: float = 0.0
+    #: set when a fault-recovery path gave up on the request: dropped
+    #: requests are excluded from slo_attainment's denominator and counted
+    #: separately from ``unfinished`` (see ServeStats)
+    dropped: bool = False
+    drop_cause: Optional[str] = None
     # wall clocks: t_arrived is stamped when the engine clock first passes
     # arrival_time (NOT at admission), so latency_s includes queue wait.
     t_arrived: Optional[float] = None
@@ -136,8 +147,13 @@ class ContinuousScheduler:
     def next_arrival(self) -> Optional[float]:
         return min((r.arrival_time for r in self.waiting), default=None)
 
-    def admit(self) -> List[ServeRequest]:
-        """Admit policy-ordered admissible requests while slots are free."""
+    def admit(self, hold=None) -> List[ServeRequest]:
+        """Admit policy-ordered admissible requests while slots are free.
+
+        ``hold`` (chaos.FaultInjector admission stalls) maps a request to
+        a defer cause or None: a held request skips this round — emitted
+        as a ``defer`` event — without blocking the requests behind it.
+        """
         ready = [r for r in self.waiting if r.arrival_time <= self.step]
         now = time.perf_counter()
         for r in ready:
@@ -146,6 +162,13 @@ class ContinuousScheduler:
         admitted = []
         tr = self.tracer
         for req in self.policy.order(ready, float(self.step)):
+            if hold is not None:
+                cause = hold(req)
+                if cause is not None:
+                    if tr:
+                        tr.emit("defer", req=req.job_id, tenant=req.tenant,
+                                cause=cause)
+                    continue
             # tenant budget: a request past its tenant's cache-unit budget
             # is skipped (its tenant already holds its allocated share) —
             # other tenants' requests behind it still admit this round.

@@ -397,6 +397,24 @@ class TenantAllocation:
         tenants' headroom free."""
         return {tid: s.headroom for tid, s in self.shares.items()}
 
+    def rescaled_reserves(self, new_total: int) -> Dict[str, int]:
+        """Headroom re-fit to a pool whose capacity changed mid-run (a
+        ``pool_shrink``/``pool_restore`` fault): each tenant's reserve
+        scales by ``new_total / total_units`` with largest-remainder
+        rounding, so the proportions the allocator planned survive the
+        shrink and the summed reserve never exceeds the scaled original —
+        reserves pinned to the old capacity would deadlock admission on a
+        pool that no longer has that many blocks."""
+        if self.total_units <= 0:
+            return self.reserves()
+        frac = max(0.0, min(1.0, new_total / self.total_units))
+        raw = {tid: s.headroom * frac for tid, s in self.shares.items()}
+        out = {tid: int(v) for tid, v in raw.items()}
+        owed = int(round(sum(raw.values()))) - sum(out.values())
+        for tid in sorted(raw, key=lambda t: out[t] - raw[t])[:max(owed, 0)]:
+            out[tid] += 1
+        return out
+
     def k_cap_for(self, tenant_ids) -> int:
         """Horizon cap for a boundary whose active rows belong to
         ``tenant_ids``: the LARGEST knee among them (a longer horizon

@@ -1,0 +1,402 @@
+"""Fault injection + trace replay tests: spec grammar, injector
+determinism, BlockManager shrink/expand/flush/audit conservation, engine
+recovery paths (regenerate / retry / drop) under all six fault kinds with
+token identity against the fault-free reference, drop-aware stats,
+truncated-trace tolerance, and the Philly replay mapping."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.api import build_model
+from repro.obs import (Tracer, load_trace, read_trace, validate_events)
+from repro.serve import (BlockManager, Fault, FaultInjector, FaultSchedule,
+                         ServeEngine, ServeRequest, philly_requests,
+                         run_replay)
+from repro.serve.tenant import TenantAllocation, TenantShare
+
+
+def _model(arch="llama3.2-1b", **over):
+    return build_model(get_config(arch, smoke=True).replace(**over))
+
+
+def _requests(cfg, lengths, arrivals=None, max_new=5, seed=5):
+    rng = np.random.default_rng(seed)
+    arrivals = arrivals or [0.0] * len(lengths)
+    return [ServeRequest(rng.integers(1, cfg.vocab_size, size=s)
+                         .astype(np.int32),
+                         max_new_tokens=max_new, arrival_time=a)
+            for s, a in zip(lengths, arrivals)]
+
+
+# ---------------------------------------------------------------------------
+# spec grammar + schedule mechanics
+# ---------------------------------------------------------------------------
+def test_fault_spec_parse():
+    f = Fault.from_spec("pool_shrink@12:blocks=6:restore_after=20")
+    assert (f.kind, f.step, f.blocks, f.restore_after) == \
+        ("pool_shrink", 12.0, 6, 20.0)
+    f = Fault.from_spec(" slot_kill@8 ")
+    assert (f.kind, f.step, f.slot) == ("slot_kill", 8.0, None)
+    sched = FaultSchedule.from_spec(
+        "slot_kill@8,arrival_burst@4:n=2:tenant=t1,defer_storm@2:duration=3",
+        seed=11)
+    assert [f.kind for f in sched.faults] == \
+        ["slot_kill", "arrival_burst", "defer_storm"]
+    assert sched.seed == 11 and sched.faults[1].n_requests == 2
+
+
+def test_fault_spec_errors():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault.from_spec("gamma_ray@3")
+    with pytest.raises(ValueError, match="needs kind@step"):
+        Fault.from_spec("slot_kill")
+    with pytest.raises(ValueError, match="bad fault spec field"):
+        Fault.from_spec("slot_kill@3:bogus=1")
+    with pytest.raises(ValueError, match="needs tenant"):
+        Fault.from_spec("tenant_slowdown@3")
+
+
+def test_schedule_json_roundtrip(tmp_path):
+    sched = FaultSchedule.from_spec(
+        "pool_shrink@12:blocks=6:restore_after=20,tenant_slowdown@4:"
+        "tenant=t0:duration=5", seed=3)
+    p = tmp_path / "faults.json"
+    p.write_text(json.dumps(sched.to_json()))
+    back = FaultSchedule.from_json(str(p))
+    assert back.seed == 3 and back.faults == sched.faults
+
+
+def test_injector_due_and_restore_insertion():
+    inj = FaultInjector(FaultSchedule.from_spec(
+        "slot_kill@8,prefix_flush@4,pool_shrink@8:blocks=2"))
+    assert inj.next_fault_step(0) == 4
+    assert [f.kind for f in inj.due(4)] == ["prefix_flush"]
+    # same-step faults pop together, declaration order preserved
+    assert [f.kind for f in inj.due(9)] == ["slot_kill", "pool_shrink"]
+    assert inj.due(100) == [] and inj.next_fault_step(0) is None
+    # defer_restore re-inserts the inverse in step order
+    shrink = Fault("pool_shrink", step=8, blocks=4, restore_after=6)
+    inj.defer_restore(shrink, applied_step=9.0, blocks=3)
+    assert inj.next_fault_step(9) == 15.0
+    (restore,) = inj.due(15)
+    assert (restore.kind, restore.blocks) == ("pool_restore", 3)
+    # reset re-arms the declared schedule (not the consumed state)
+    inj.reset()
+    assert inj.next_fault_step(0) == 4
+
+
+def test_injector_holds_and_precedence():
+    inj = FaultInjector(FaultSchedule())
+    req = ServeRequest(np.zeros(4, np.int32), max_new_tokens=1, tenant="t1")
+    assert not inj.has_holds(0) and inj.hold_cause(req, 0) is None
+    inj.hold("t1", until=5.0)
+    assert inj.hold_cause(req, 3) == "tenant_slowdown"
+    assert inj.hold_cause(req, 5) is None          # window is exclusive
+    inj.hold(None, until=8.0)                      # global storm outranks
+    assert inj.hold_cause(req, 3) == "defer_storm"
+    assert inj.release_step(3) == 5.0 and inj.release_step(6) == 8.0
+    assert inj.has_holds(7) and not inj.has_holds(8)
+
+
+def test_injector_seeded_choices_replay():
+    sched = FaultSchedule.from_spec("arrival_burst@2:n=3", seed=9)
+    a, b = FaultInjector(sched), FaultInjector(sched)
+    for inj in (a, b):
+        inj.bind(vocab_size=97, max_len=32, n_slots=4)
+    f = sched.faults[0]
+    picks_a = [a.pick_slot([0, 2, 3]) for _ in range(5)]
+    picks_b = [b.pick_slot([0, 2, 3]) for _ in range(5)]
+    assert picks_a == picks_b
+    assert a.pick_slot([0, 2, 3], want=2) == 2     # live want wins
+    assert a.pick_slot([]) is None
+    burst_a = [r.prompt.tolist() for r in a.burst_requests(f)]
+    a.reset()
+    for _ in range(5):
+        a.pick_slot([0, 2, 3])
+    assert [r.prompt.tolist() for r in a.burst_requests(f)] == burst_a
+
+
+# ---------------------------------------------------------------------------
+# BlockManager fault surface: shrink / expand / flush / audit
+# ---------------------------------------------------------------------------
+def test_shrink_expand_arithmetic_and_deficit():
+    pool = BlockManager(_model(), n_slots=4, max_len=32, block_size=8,
+                        n_blocks=8, watermark=0.25)
+    assert pool.watermark_blocks == 2
+    slot = pool.alloc_for(ServeRequest(np.zeros(17, np.int32),
+                                       max_new_tokens=4))     # 3 blocks held
+    assert pool.shrink(7) == 7                     # wants 7, 5 idle: deficit 2
+    assert pool.n_blocks == 1 and pool.free_blocks == 0
+    assert pool.report()["revoke_deficit"] == 2
+    assert pool.watermark_blocks == 1              # ceil(0.25 * 1)
+    pool.audit()
+    pool.free(slot)                                # deficit collected first
+    assert pool.report()["revoke_deficit"] == 0
+    assert pool.free_blocks == 1
+    pool.audit()
+    assert pool.expand(100) == 7                   # only what was revoked
+    assert pool.n_blocks == 8 and pool.free_blocks == 8
+    assert pool.audit()["capacity"] == 8
+    # at least one block of capacity always survives a shrink
+    assert pool.shrink(100) == 7 and pool.n_blocks == 1
+    pool.audit()
+
+
+def test_shrink_while_shared_and_flush_at_nonzero_refcount():
+    pool = BlockManager(_model(), n_slots=4, max_len=32, block_size=4,
+                        n_blocks=12, watermark=0.0, prefix_cache=True)
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(1, 50, size=8).astype(np.int32)
+    a = pool.alloc_for(ServeRequest(np.concatenate([prefix, [3, 4, 5]])
+                                    .astype(np.int32), max_new_tokens=2))
+    for j in range(2):
+        pool.commit_block(a, j)                    # prefix blocks hittable
+    b = pool.alloc_for(ServeRequest(np.concatenate([prefix, [7, 8]])
+                                    .astype(np.int32), max_new_tokens=2))
+    assert pool.prefix_blocks_hit == 2             # b shares both full blocks
+    pool.audit()
+    # shrink while blocks are shared: idle first, deficit for the rest
+    pool.shrink(9)
+    pool.audit()
+    # flush at nonzero refcount: entries retire, blocks stay with holders
+    flushed = pool.flush_prefix()
+    assert flushed == 2
+    pool.audit()
+    # a newcomer with the same prefix must NOT hit retired entries
+    hits0 = pool.prefix_blocks_hit
+    pool.free(a)
+    pool.audit()                                   # a's frees feed the deficit
+    pool.free(b)                                   # last holder: blocks leave
+    pool.audit()
+    c = pool.alloc_for(ServeRequest(np.concatenate([prefix, [9]])
+                                    .astype(np.int32), max_new_tokens=2))
+    assert c is not None and pool.prefix_blocks_hit == hits0
+    pool.audit()
+
+
+def test_flush_prefix_frees_evictable_immediately():
+    pool = BlockManager(_model(), n_slots=2, max_len=32, block_size=4,
+                        n_blocks=8, watermark=0.0, prefix_cache=True)
+    prompt = np.arange(1, 10, dtype=np.int32)      # two full blocks + tail
+    s = pool.alloc_for(ServeRequest(prompt, max_new_tokens=2))
+    for j in range(2):
+        pool.commit_block(s, j)
+    pool.free(s)
+    assert pool.evictable_blocks == 2
+    free_before = len(pool._free_blocks)
+    assert pool.flush_prefix() == 2
+    assert pool.evictable_blocks == 0
+    assert len(pool._free_blocks) == free_before + 2
+    pool.audit()
+
+
+def test_audit_catches_seeded_corruption():
+    pool = BlockManager(_model(), n_slots=2, max_len=32, block_size=8,
+                        n_blocks=6, watermark=0.0)
+    slot = pool.alloc_for(ServeRequest(np.zeros(9, np.int32),
+                                       max_new_tokens=2))
+    pool.audit()
+    blk = int(pool.tables[slot, 0])
+    pool._free_blocks.append(blk)                  # block now free AND held
+    with pytest.raises(RuntimeError, match="block audit failed"):
+        pool.audit()
+    pool._free_blocks.pop()
+    pool.audit()
+    pool._revoked.append(99)                       # capacity arithmetic break
+    with pytest.raises(RuntimeError, match="capacity arithmetic"):
+        pool.audit()
+
+
+def test_audit_under_preemption_storm():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    eng = ServeEngine(cfg, max_len=32, n_slots=3, cache="paged",
+                      block_size=8, n_blocks=6, watermark=0.0,
+                      decode_horizon=2)
+    out, stats = eng.run(_requests(cfg, [9, 12, 10, 8], max_new=8))
+    assert stats.preemptions > 0                   # undersized pool: storms
+    eng.pool.audit()
+    assert all(len(r.output) == r.max_new_tokens for r in out)
+
+
+def test_rescaled_reserves_proportions():
+    alloc = TenantAllocation(
+        shares={"a": TenantShare("a", units=8, k_cap=4, lanes=2, headroom=4),
+                "b": TenantShare("b", units=8, k_cap=4, lanes=2, headroom=2)},
+        total_units=16, max_k=8)
+    assert alloc.rescaled_reserves(16) == {"a": 4, "b": 2}
+    half = alloc.rescaled_reserves(8)
+    assert sum(half.values()) == 3 and half["a"] >= half["b"]
+    assert alloc.rescaled_reserves(0) == {"a": 0, "b": 0}
+    assert alloc.rescaled_reserves(32) == {"a": 4, "b": 2}  # capped at 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine recovery paths + determinism + exactness
+# ---------------------------------------------------------------------------
+def _chaos_engine(cfg, spec, seed=0, **kw):
+    inj = FaultInjector(FaultSchedule.from_spec(spec, seed=seed))
+    kw.setdefault("cache", "paged")
+    kw.setdefault("block_size", 8)
+    kw.setdefault("decode_horizon", 4)
+    return ServeEngine(cfg, max_len=32, n_slots=3, injector=inj, **kw)
+
+
+def test_slot_kill_regenerates_token_identical():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reqs = _requests(cfg, [9, 12, 10], max_new=6)
+    ref, _ = ServeEngine(cfg, max_len=32, decode_horizon=1).run(
+        _requests(cfg, [9, 12, 10], max_new=6))
+    eng = _chaos_engine(cfg, "slot_kill@2,slot_kill@4")
+    out, stats = eng.run(reqs)
+    assert stats.faults_injected == 2
+    assert stats.preemptions >= 1 and stats.recoveries >= 1
+    assert stats.dropped == 0
+    for r, rr in zip(sorted(out, key=lambda r: r.job_id),
+                     sorted(ref, key=lambda r: r.job_id)):
+        assert r.output == rr.output
+
+
+def test_all_six_kinds_survive_and_verify():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    spec = ("defer_storm@1:duration=2,tenant_slowdown@2:tenant=default:"
+            "duration=2,slot_kill@3,arrival_burst@4:n=2:prompt_len=8:"
+            "max_new=3,prefix_flush@5,pool_shrink@6:blocks=3:restore_after=4")
+    eng = _chaos_engine(cfg, spec, seed=1, prefix_cache=True,
+                        tracer=Tracer())
+    reqs = _requests(cfg, [9, 12, 10, 8], arrivals=[0, 0, 2, 5], max_new=5)
+    res = run_replay(eng, reqs, verify=True, ref_cfg=cfg, ref_max_len=32)
+    # all six kinds applied (+ the auto-scheduled pool_restore inverse)
+    assert {k for k, _ in res.faults} == {
+        "defer_storm", "tenant_slowdown", "slot_kill", "arrival_burst",
+        "prefix_flush", "pool_shrink", "pool_restore"}
+    assert res.stats.faults_injected == len(res.faults) == 7
+    assert len(res.requests) == 6                  # 4 + 2 burst arrivals
+    assert res.verified and not res.mismatched
+    eng.pool.audit()
+    assert not validate_events(list(eng.tracer.events))
+
+
+def test_chaos_replay_is_deterministic():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    spec = "slot_kill@2,arrival_burst@3:n=2:prompt_len=8:max_new=3," \
+           "pool_shrink@4:blocks=2:restore_after=3"
+
+    def once():
+        eng = _chaos_engine(cfg, spec, seed=5, tracer=Tracer())
+        out, stats = eng.run(_requests(cfg, [9, 12, 10], max_new=5))
+        evs = [{k: v for k, v in e.items()
+                if k not in ("t", "wall_t", "dur_s")}
+               for e in eng.tracer.events
+               if e["ev"] in ("fault_inject", "recover", "admit", "preempt",
+                              "evict", "defer")]
+        return ([r.output for r in out], list(eng.injector.injected), evs)
+
+    assert once() == once()
+
+
+def test_pool_shrink_drops_score_separately():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    # shrink to (almost) nothing with no restore: late arrivals can never
+    # admit again and must drop after bounded retries, not wedge the run.
+    eng = _chaos_engine(cfg, "pool_shrink@2:blocks=64", n_blocks=12,
+                        max_admit_retries=2)
+    reqs = _requests(cfg, [9, 12, 10, 11], arrivals=[0, 0, 6, 6], max_new=4)
+    out, stats = eng.run(reqs)
+    assert stats.dropped >= 1
+    dropped = [r for r in out if r.dropped]
+    assert all(r.drop_cause == "pool_shrink" and r.output == []
+               for r in dropped)
+    scored = [r for r in out if not r.dropped]
+    assert all(len(r.output) == r.max_new_tokens for r in scored)
+    # drops are NOT unfinished, and attainment is over the scored set only
+    assert stats.unfinished == 0
+    assert stats.slo_attainment == 1.0
+    eng.pool.audit()
+
+
+def test_contiguous_cache_survives_chaos():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    inj = FaultInjector(FaultSchedule.from_spec(
+        "slot_kill@2,pool_shrink@3:blocks=4,prefix_flush@4"))
+    eng = ServeEngine(cfg, max_len=32, n_slots=2, cache="contiguous",
+                      decode_horizon=2, injector=inj)
+    ref, _ = ServeEngine(cfg, max_len=32, decode_horizon=1).run(
+        _requests(cfg, [9, 12, 10], max_new=5))
+    out, stats = eng.run(_requests(cfg, [9, 12, 10], max_new=5))
+    assert stats.faults_injected == 3              # shrink/flush no-op, logged
+    for r, rr in zip(sorted(out, key=lambda r: r.job_id),
+                     sorted(ref, key=lambda r: r.job_id)):
+        assert r.output == rr.output
+
+
+# ---------------------------------------------------------------------------
+# truncated traces + fault report
+# ---------------------------------------------------------------------------
+def test_read_trace_tolerates_truncated_tail(tmp_path):
+    p = tmp_path / "t.jsonl"
+    rows = [{"ev": "run_start", "step": 0}, {"ev": "admit", "step": 1}]
+    p.write_text("\n".join(json.dumps(r) for r in rows)
+                 + "\n" + '{"ev": "evi')
+    events, truncated = read_trace(str(p))
+    assert truncated and events == rows
+    assert load_trace(str(p)) == rows              # back-compat wrapper
+    # a clean file reports no truncation
+    p.write_text("\n".join(json.dumps(r) for r in rows) + "\n")
+    events, truncated = read_trace(str(p))
+    assert not truncated and events == rows
+    # corruption in the MIDDLE is a real error, not writer tail-loss
+    p.write_text('{"ev": "bro\n' + json.dumps(rows[0]) + "\n")
+    with pytest.raises(json.JSONDecodeError):
+        read_trace(str(p))
+
+
+def test_trace_report_fault_table_and_validate(tmp_path):
+    from repro.launch.trace_report import build_report, main
+    cfg = get_config("llama3.2-1b", smoke=True)
+    eng = _chaos_engine(cfg, "slot_kill@2,pool_shrink@3:blocks=64",
+                        n_blocks=12, max_admit_retries=1, tracer=Tracer())
+    eng.run(_requests(cfg, [9, 12, 10], arrivals=[0, 0, 6], max_new=4))
+    p = tmp_path / "chaos.jsonl"
+    eng.tracer.dump_jsonl(str(p))
+    report = build_report(load_trace(str(p)))
+    assert report["faults"]["injected"] == {"pool_shrink": 1, "slot_kill": 1}
+    actions = {(r["kind"], r["action"]): r["n"]
+               for r in report["faults"]["recoveries"]}
+    assert actions[("slot_kill", "regenerate")] == 1
+    assert ("pool_shrink", "drop") in actions
+    assert report["faults"]["drops"] >= 1
+    # --validate passes the chaos trace and tolerates a truncated tail
+    assert main([str(p), "--validate", "--json"]) == 0
+    with open(p, "a") as f:
+        f.write('{"ev": "adm')
+    assert main([str(p), "--validate", "--json"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Philly replay mapping
+# ---------------------------------------------------------------------------
+def test_philly_requests_deterministic_and_shaped():
+    a = philly_requests(257, 12, load=2.0, seed=3, prompt_len=12,
+                        max_new=8, max_len=64)
+    b = philly_requests(257, 12, load=2.0, seed=3, prompt_len=12,
+                        max_new=8, max_len=64)
+    assert len(a) == 12
+    assert [r.prompt.tolist() for r in a] == [r.prompt.tolist() for r in b]
+    assert [r.arrival_time for r in a] == [r.arrival_time for r in b]
+    for r in a:
+        assert 1 <= len(r.prompt) <= 12
+        assert 1 <= r.max_new_tokens <= 8
+        assert len(r.prompt) + r.max_new_tokens <= 64
+    assert a != philly_requests(257, 12, load=2.0, seed=4, prompt_len=12,
+                                max_new=8, max_len=64)
+    with pytest.raises(ValueError, match="load"):
+        philly_requests(257, 4, load=0.0)
+
+
+def test_run_replay_verify_requires_ref_cfg():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    eng = ServeEngine(cfg, max_len=32, n_slots=2, decode_horizon=2)
+    with pytest.raises(ValueError, match="ref_cfg"):
+        run_replay(eng, _requests(cfg, [6, 8], max_new=2), verify=True)
