@@ -106,6 +106,7 @@ def run():
     rows.extend(_obs_rows(n, max_new))
     rows.extend(_profiled_rows(n, max_new))
     rows.extend(_chaos_rows(n))
+    rows.extend(_elastic_rows(n))
     return rows
 
 
@@ -153,6 +154,58 @@ def _chaos_rows(n):
             row["derived"] += (f" recovery_s="
                                f"{st.wall_s - walls['replay-clean']:.3f}")
         rows.append(row)
+    return rows
+
+
+def _elastic_rows(n):
+    """Elastic recovery value, at EQUAL fault budget: the same Philly
+    request set through the same paged engine under the same
+    ``device_fail`` (the pool revoked down to its one-block floor, mesh
+    narrowed) —
+    once with the scheduled ``device_join`` recovery (the pool and
+    bucketing restore mid-run, parked requests admit, nothing drops) and
+    once with the failure left standing (requests burn their admission
+    retries against a pool that will never fit them and drop).
+    Gated fields: ``dropped`` (0 with recovery — the hold-don't-drop
+    admission contract) and ``slo_attainment`` over the scored set. The
+    in-module assertion pins the headline: recovery must strictly beat
+    no-recovery on tokens/s, else the reshape machinery is costing more
+    than the capacity it returns."""
+    from repro.serve import FaultInjector, FaultSchedule, philly_requests
+
+    arch = "qwen2-0.5b"
+    cfg = get_config(arch, smoke=True)
+    max_len, block, n_blocks = 64, 8, 24
+
+    def reqs():
+        return philly_requests(cfg.vocab_size, n, load=1.0, seed=7,
+                               prompt_len=12, max_new=12, max_len=max_len)
+
+    fail = "device_fail@2:blocks=23"
+    rows, tok_s = [], {}
+    for label, spec in (("elastic-recovery", fail + ":restore_after=4"),
+                        ("elastic-norecovery", fail)):
+        inj = FaultInjector(FaultSchedule.from_spec(spec))
+        eng = ServeEngine(cfg, max_len=max_len, n_slots=max(2, n // 2),
+                          cache="paged", block_size=block, n_blocks=n_blocks,
+                          injector=inj, max_admit_retries=2)
+        _, st = _run_warm(eng, reqs)
+        eng.pool.audit()
+        tok_s[label] = st.tokens_per_s
+        row = _row(f"serve/{label}/{arch}", st)
+        row["dropped"] = st.dropped
+        row["slo_attainment"] = st.slo_attainment
+        row["derived"] += (f" ups={st.scale_ups} downs={st.scale_downs} "
+                           f"drop={st.dropped} att={st.slo_attainment:.2f}")
+        rows.append(row)
+        if label == "elastic-recovery":
+            assert st.dropped == 0, \
+                f"recovery run dropped {st.dropped} requests"
+            assert st.scale_ups == 1 and st.scale_downs == 1, st
+    assert tok_s["elastic-recovery"] > tok_s["elastic-norecovery"], \
+        (f"recovery must beat no-recovery: "
+         f"{tok_s['elastic-recovery']:.2f} <= "
+         f"{tok_s['elastic-norecovery']:.2f} tok/s")
     return rows
 
 

@@ -91,6 +91,22 @@ def main() -> None:
     ap.add_argument("--max-admit-retries", type=int, default=4,
                     help="admission retries with exponential backoff before "
                          "a request is dropped during pool_shrink")
+    ap.add_argument("--elastic", action="store_true",
+                    help="install an ElasticController: proactive scale "
+                         "up/down from the occupancy/queue/slack gauges, "
+                         "on top of reactive device_fail/device_join "
+                         "recovery")
+    ap.add_argument("--elastic-max-units", type=int, default=None,
+                    help="proactive scale-up capacity ceiling in cache "
+                         "units (default: the pool's constructed size)")
+    ap.add_argument("--elastic-min-units", type=int, default=None,
+                    help="proactive scale-down floor (default: no "
+                         "proactive shrink below the constructed size)")
+    ap.add_argument("--elastic-step-units", type=int, default=8,
+                    help="cache units moved per proactive reshape")
+    ap.add_argument("--elastic-cooldown", type=float, default=16.0,
+                    help="decode steps between reshapes (shared between "
+                         "proactive decisions and chaos recovery)")
     ap.add_argument("--verify", action="store_true",
                     help="check every non-dropped output against the "
                          "fault-free single-device static engine")
@@ -120,6 +136,14 @@ def main() -> None:
         from repro.obs import Tracer
         tracer = Tracer(capacity=args.trace_capacity)
 
+    elastic = None
+    if args.elastic:
+        from repro.serve import ElasticController
+        elastic = ElasticController(step_units=args.elastic_step_units,
+                                    max_units=args.elastic_max_units,
+                                    min_units=args.elastic_min_units,
+                                    cooldown=args.elastic_cooldown)
+
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=args.blocks or None,
                      watermark=args.watermark,
@@ -127,7 +151,7 @@ def main() -> None:
                      prefix_cache=args.prefix_cache,
                      decode_horizon=args.decode_horizon,
                      eos_token=args.eos_token,
-                     injector=injector,
+                     injector=injector, elastic=elastic,
                      max_admit_retries=args.max_admit_retries,
                      tracer=tracer, metrics_every=args.metrics_every)
 
@@ -163,6 +187,7 @@ def main() -> None:
         "n_requests": len(res.requests),
         "faults": [{"kind": k, "step": s} for k, s in res.faults],
         "dropped_ids": res.dropped,
+        "elastic": bool(elastic),
         **dataclasses.asdict(res.stats),
     }
     if trace_info is not None:

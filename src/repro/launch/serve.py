@@ -280,6 +280,21 @@ def main() -> None:
                          "into the tenant calibrate when a fit exists; "
                          "with --profile, this run's per-signature costs "
                          "are merged back in")
+    ap.add_argument("--elastic", action="store_true",
+                    help="install an ElasticController: the engine scales "
+                         "the pool up/down at horizon boundaries from the "
+                         "occupancy/queue/slack gauges, re-planning tenant "
+                         "budgets at every reshape")
+    ap.add_argument("--elastic-max-units", type=int, default=None,
+                    help="proactive scale-up ceiling in cache units "
+                         "(default: the constructed pool size)")
+    ap.add_argument("--elastic-min-units", type=int, default=None,
+                    help="proactive scale-down floor (default: no "
+                         "proactive shrink)")
+    ap.add_argument("--elastic-step-units", type=int, default=8,
+                    help="cache units per proactive reshape")
+    ap.add_argument("--elastic-cooldown", type=float, default=16.0,
+                    help="decode steps between reshapes")
     args = ap.parse_args()
 
     if args.verify and args.temperature > 0:
@@ -317,6 +332,14 @@ def main() -> None:
         n_dev = jax.device_count() if args.mesh == "host" else 1
         profiler = DispatchProfiler(cfg, n_devices=n_dev)
 
+    elastic = None
+    if args.elastic:
+        from repro.serve import ElasticController
+        elastic = ElasticController(step_units=args.elastic_step_units,
+                                    max_units=args.elastic_max_units,
+                                    min_units=args.elastic_min_units,
+                                    cooldown=args.elastic_cooldown)
+
     engine_kw = dict(cache=args.cache, block_size=args.block_size,
                      n_blocks=n_blocks, watermark=args.watermark,
                      prefill_lanes=args.prefill_lanes,
@@ -326,7 +349,8 @@ def main() -> None:
                      eos_token=args.eos_token,
                      tenants=registry, allocation=allocation,
                      tracer=tracer, metrics_every=args.metrics_every,
-                     profiler=profiler)
+                     profiler=profiler, elastic=elastic,
+                     profile_store=store)
 
     if args.mesh == "host":
         engine = sharded_engine(cfg, n_slots=n_slots or args.batch,
@@ -356,6 +380,7 @@ def main() -> None:
         "policy": args.policy,
         "n_devices": jax.device_count(),
         "slots": n_slots or args.batch,
+        "elastic": bool(elastic),
         **dataclasses.asdict(stats),
         "sample_output": out[0].output[:8],
     }

@@ -23,6 +23,9 @@ the summaries the raw event stream only implies:
   * **Fault report** — chaos-replay traces (``launch/replay.py``) carry
     ``fault_inject`` / ``recover`` events; these are tabulated by fault
     kind and by recovery action (regenerate / retry / drop / restore).
+  * **Scale report** — elastic reshapes (``scale_up`` / ``scale_down`` /
+    ``migrate``): one row per reshape with units moved, capacity and mesh
+    multiple after, and the reason, plus state-migration totals.
 
 Flags: ``--json`` emits the full report as one JSON object; ``--buckets``
 sets the timeline resolution; ``--validate`` checks every event against
@@ -227,6 +230,30 @@ def fault_report(events):
     }
 
 
+def scale_report(events):
+    """Elastic-reshape tables from a trace (serve/elastic.py).
+
+    One row per ``scale_up`` / ``scale_down`` event — when, why, how many
+    units moved, the capacity and mesh multiple after — plus migration
+    totals from ``migrate`` events (blocks moved across physical pool
+    growths, and the wall time spent migrating). Empty for traces without
+    reshapes."""
+    rows = [{"step": e["step"], "kind": e["ev"], "units": e["units"],
+             "capacity": e["capacity"], "dmult": e["dmult"],
+             "reason": e["reason"]}
+            for e in events if e["ev"] in ("scale_up", "scale_down")]
+    migs = [e for e in events if e["ev"] == "migrate"]
+    return {
+        "events": rows,
+        "scale_ups": sum(r["kind"] == "scale_up" for r in rows),
+        "scale_downs": sum(r["kind"] == "scale_down" for r in rows),
+        "migrations": len(migs),
+        "migrated_blocks": sum(e["blocks"] for e in migs),
+        "grown_blocks": sum(e["added"] for e in migs),
+        "migrate_wall_s": sum(e["dur_s"] for e in migs),
+    }
+
+
 def build_report(events, n_buckets: int = 8) -> dict:
     """The full analyzer output as one JSON-able dict."""
     meta = next((e for e in events if e["ev"] == "trace_meta"), None)
@@ -247,6 +274,7 @@ def build_report(events, n_buckets: int = 8) -> dict:
         "phase_costs": phase_costs(body),
         "queue": queue_report(body),
         "faults": fault_report(body),
+        "scaling": scale_report(body),
     }
 
 
@@ -299,6 +327,20 @@ def _print_human(report: dict) -> None:
         for row in f["recoveries"]:
             print(f"  {row['kind']:<16} {row['action']:<12} x{row['n']}")
         print(f"requests dropped by chaos: {f['drops']}")
+    s = report.get("scaling") or {}
+    if s.get("events"):
+        print("\nelastic reshapes:")
+        print(f"  {'step':>6} {'kind':<12} {'units':>5} {'capacity':>8} "
+              f"{'dmult':>5} reason")
+        for row in s["events"]:
+            print(f"  {row['step']:>6.0f} {row['kind']:<12} "
+                  f"{row['units']:>5} {row['capacity']:>8} "
+                  f"{row['dmult']:>5} {row['reason']}")
+        if s["migrations"]:
+            print(f"  migrations: {s['migrations']} "
+                  f"({s['migrated_blocks']} blocks moved, "
+                  f"{s['grown_blocks']} grown, "
+                  f"{s['migrate_wall_s']*1e3:.1f} ms)")
     print("\nSLO timeline:")
     if not report["slo_timeline"]:
         print("  (no evictions in trace)")

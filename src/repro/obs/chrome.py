@@ -44,6 +44,8 @@ _TRACKS = {
     "block_free": (3, "pool"), "prefix_evict": (3, "pool"),
     "dispatch_profile": (4, "profile"),
     "fault_inject": (5, "chaos"), "recover": (5, "chaos"),
+    "scale_up": (6, "elastic"), "scale_down": (6, "elastic"),
+    "migrate": (6, "elastic"),
 }
 
 
@@ -61,6 +63,10 @@ def _name(e: dict) -> str:
         return f"fault[{e.get('kind')}]"
     if ev == "recover":
         return f"recover[{e.get('kind')}:{e.get('action')}]"
+    if ev in ("scale_up", "scale_down"):
+        return f"{ev}[{e.get('reason')}:{e.get('units')}]"
+    if ev == "migrate":
+        return f"migrate[{e.get('blocks')}+{e.get('added')}]"
     return ev
 
 

@@ -60,9 +60,20 @@ EVENT_SCHEMA: Dict[str, FrozenSet[str]] = {
     # (blocks revoked, hold steps, burst size, entries flushed).
     "fault_inject": frozenset({"kind", "target", "mag"}),
     # a recovery action the engine took for an injected fault: action in
-    # {regenerate, retry, drop, restore, reserve_rescale, noop}; ``req``
-    # is the affected request id (None for pool-wide actions).
+    # {regenerate, retry, drop, restore, reserve_rescale, replan, noop};
+    # ``req`` is the affected request id (None for pool-wide actions).
     "recover": frozenset({"kind", "action", "req", "detail"}),
+    # -- elastic reshapes (serve/elastic.py; emitted at horizon boundaries) -
+    # ``units``: the capacity delta applied (may be less than planned when
+    # the pool could not satisfy it); ``capacity``: pool capacity AFTER;
+    # ``dmult``: the mesh 'data' bucketing multiple after the reshape;
+    # ``reason``: device_fail / device_join / occupancy / queue_depth /
+    # slack.
+    "scale_up": frozenset({"units", "capacity", "dmult", "reason"}),
+    "scale_down": frozenset({"units", "capacity", "dmult", "reason"}),
+    # a physical-growth state migration (BlockManager.grow_physical):
+    # ``blocks`` existing blocks whose content moved into the new buffers.
+    "migrate": frozenset({"blocks", "added", "dur_s"}),
     # -- block pool ---------------------------------------------------------
     "block_alloc": frozenset({"slot", "blocks", "hits"}),
     "block_grow": frozenset({"slot", "blocks"}),
@@ -73,7 +84,8 @@ EVENT_SCHEMA: Dict[str, FrozenSet[str]] = {
 }
 
 #: span types: rendered as duration tracks by the Chrome exporter
-SPAN_EVENTS = frozenset({"prefill", "prefill_round", "decode_horizon"})
+SPAN_EVENTS = frozenset({"prefill", "prefill_round", "decode_horizon",
+                         "migrate"})
 
 
 class NullTracer:

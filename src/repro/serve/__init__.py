@@ -5,6 +5,7 @@ See serve/README.md for the architecture.
 from repro.serve.cache import CachePool
 from repro.serve.chaos import (FAULT_KINDS, Fault, FaultInjector,
                                FaultSchedule)
+from repro.serve.elastic import ElasticController, ScalePlan
 from repro.serve.engine import (CACHE_BACKENDS, Request, ServeEngine,
                                 ServeStats, serve_step_fn)
 from repro.serve.paged import BlockManager
@@ -20,8 +21,9 @@ from repro.serve.tenant import (SLOSlack, ServeClassProfile, Tenant,
 
 __all__ = [
     "BlockManager", "CACHE_BACKENDS", "CachePool", "ContinuousScheduler",
-    "FAULT_KINDS", "Fault", "FaultInjector", "FaultSchedule",
-    "ReplayResult", "Request", "ServeClassProfile", "ServeEngine",
+    "ElasticController", "FAULT_KINDS", "Fault", "FaultInjector",
+    "FaultSchedule", "ReplayResult", "Request", "ScalePlan",
+    "ServeClassProfile", "ServeEngine",
     "ServeRequest", "ServeSharding", "ServeStats", "SERVE_POLICIES",
     "SLOSlack", "Tenant", "TenantAllocation", "TenantAllocator",
     "TenantRegistry", "TenantShare", "make_serve_sharding",

@@ -51,6 +51,11 @@ class CachePool:
         self.buffers = model.init_cache(n_slots, max_len)
         self._free = deque(range(n_slots))
         self._in_use: set = set()
+        #: elastic capacity (serve/elastic.py): slots revoked by a
+        #: device_fail / scale_down — physically still in the buffers (the
+        #: arrays never reallocate) but withheld from allocation until a
+        #: device_join / scale_up expands them back.
+        self._revoked: list = []
 
     # -- slot management -----------------------------------------------------
     def alloc(self) -> Optional[int]:
@@ -76,8 +81,33 @@ class CachePool:
         return frozenset(self._in_use)
 
     @property
+    def capacity(self) -> int:
+        """Live slot capacity: total minus elastically revoked slots (the
+        contiguous twin of ``BlockManager.n_blocks``)."""
+        return self.n_slots - len(self._revoked)
+
+    @property
     def utilization(self) -> float:
-        return len(self._in_use) / self.n_slots
+        return len(self._in_use) / max(self.capacity, 1)
+
+    # -- elastic capacity (serve/elastic.py reshape surface) -----------------
+    def shrink(self, n: int) -> int:
+        """Revoke up to ``n`` IDLE slots of capacity (a ``device_fail`` /
+        ``scale_down`` on the contiguous backend). Only idle slots are
+        revocable — in-flight rows keep their device state — and at least
+        one slot of capacity always survives. Returns the slots revoked."""
+        take = max(0, min(int(n), len(self._free), self.capacity - 1))
+        for _ in range(take):
+            self._revoked.append(self._free.pop())
+        return take
+
+    def expand(self, n: int) -> int:
+        """Return up to ``n`` revoked slots (``device_join`` / ``scale_up``)
+        to the free list. Returns the slots restored."""
+        give = min(int(n), len(self._revoked))
+        for _ in range(give):
+            self._free.append(self._revoked.pop())
+        return give
 
     # -- buffer access ---------------------------------------------------------
     def write(self, slot: int, row_cache) -> None:

@@ -37,10 +37,24 @@ Fault taxonomy (``FAULT_KINDS``):
                    freed when their last holder exits).
 ``defer_storm``    ALL admission stalls for ``duration`` steps (an
                    admission-control brownout).
+``device_fail``    a device leaves the serving mesh: the engine shrinks the
+                   block pool by ``blocks`` AND narrows the mesh 'data'
+                   bucketing multiple (decode buckets fall back to
+                   replicated layouts); optionally undone by an
+                   auto-scheduled ``device_join`` after ``restore_after``.
+``device_join``    a device (re)joins the mesh: pool capacity returns —
+                   growing PAST the original allocation when the join
+                   exceeds what a failure revoked (``BlockManager.
+                   grow_physical`` migrates live KV blocks into the larger
+                   buffers) — and the 'data' bucketing multiple is restored.
 =================  ==========================================================
 
 ``pool_restore`` is the internal inverse of ``pool_shrink`` (auto-scheduled
-by ``restore_after``, or usable directly in a schedule).
+by ``restore_after``, or usable directly in a schedule); ``device_join`` is
+likewise the inverse ``device_fail`` auto-schedules. ``pending_capacity``
+sums the blocks those pending inverses will return — the engine's admission
+path holds (rather than drops) requests that fit the pool *plus* that
+incoming capacity.
 """
 from __future__ import annotations
 
@@ -52,10 +66,15 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-#: the six injectable fault kinds (plus the internal pool_restore inverse)
+#: the injectable fault kinds (plus the internal pool_restore inverse)
 FAULT_KINDS = ("pool_shrink", "slot_kill", "tenant_slowdown",
-               "arrival_burst", "prefix_flush", "defer_storm")
+               "arrival_burst", "prefix_flush", "defer_storm",
+               "device_fail", "device_join")
 _ALL_KINDS = FAULT_KINDS + ("pool_restore",)
+
+#: fault kinds whose pending application RETURNS pool capacity (the engine
+#: holds — instead of drops — requests that fit current + pending blocks)
+_CAPACITY_KINDS = ("pool_restore", "device_join")
 
 #: spec-key -> (attribute, parser) for the ``kind@step:key=val`` grammar
 _SPEC_KEYS = {
@@ -204,13 +223,25 @@ class FaultInjector:
 
     def defer_restore(self, fault: Fault, applied_step: float,
                       blocks: int) -> None:
-        """Schedule the ``pool_restore`` inverse of an applied shrink."""
-        restore = replace(fault, kind="pool_restore", blocks=blocks,
+        """Schedule the kind-appropriate inverse of an applied capacity
+        loss: ``pool_restore`` for a ``pool_shrink``, ``device_join`` for a
+        ``device_fail`` (the join must also widen the mesh bucketing, which
+        a plain restore does not)."""
+        inverse = "device_join" if fault.kind == "device_fail" \
+            else "pool_restore"
+        restore = replace(fault, kind=inverse, blocks=blocks,
                           step=applied_step + float(fault.restore_after),
                           restore_after=None)
         i = bisect.bisect_right(self._steps, restore.step)
         self._pending.insert(i, restore)
         self._steps.insert(i, restore.step)
+
+    def pending_capacity(self, step: float) -> int:
+        """KV blocks that pending ``pool_restore`` / ``device_join`` faults
+        strictly after ``step`` will hand back — the capacity an admission
+        decision may count on arriving (the hold-don't-drop window)."""
+        return sum(f.blocks for f in self._pending
+                   if f.step > step and f.kind in _CAPACITY_KINDS)
 
     # -- admission holds ------------------------------------------------------
     def hold(self, tenant: Optional[str], until: float) -> None:

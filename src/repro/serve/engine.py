@@ -87,6 +87,7 @@ from repro.configs.base import ArchConfig
 from repro.models.api import Model, build_model
 from repro.obs import NULL_PROFILER, NULL_TRACER, RunObs
 from repro.serve.cache import CachePool
+from repro.serve.elastic import ScalePlan, pool_capacity
 from repro.serve.paged import BlockManager
 from repro.serve.scheduler import ContinuousScheduler, ServeRequest
 from repro.serve.tenant import SLOSlack, TenantAllocation, TenantRegistry
@@ -192,6 +193,13 @@ class ServeStats:
                                       # the shrunken pool can never hold
                                       # them) — counted SEPARATELY from
                                       # unfinished
+    # -- elastic reshapes (serve/elastic.py; all 0 without reshapes) -----------
+    scale_ups: int = 0                # applied scale_up reshapes
+    scale_downs: int = 0              # applied scale_down reshapes
+    migrated_blocks: int = 0          # live blocks migrated across a
+                                      # physical pool growth (grow_physical)
+    replans: int = 0                  # allocator re-plans at reshape
+                                      # boundaries (measured-rate refresh)
 
 
 @dataclass
@@ -347,7 +355,8 @@ class ServeEngine:
                  tenants: Optional[TenantRegistry] = None,
                  allocation: Optional[TenantAllocation] = None,
                  tracer=None, metrics_every: int = 1, profiler=None,
-                 injector=None, max_admit_retries: int = 4):
+                 injector=None, max_admit_retries: int = 4,
+                 elastic=None, profile_store=None):
         if cache not in CACHE_BACKENDS:
             raise ValueError(f"unknown cache backend {cache!r}; "
                              f"known: {CACHE_BACKENDS}")
@@ -393,6 +402,25 @@ class ServeEngine:
         #: degradation (bounded retry-with-backoff, then drop).
         self.injector = injector
         self.max_admit_retries = max(int(max_admit_retries), 1)
+        #: elastic controller (elastic.ElasticController) — None disables
+        #: proactive reshapes. Polled at every horizon boundary after fault
+        #: application; an emitted ScalePlan is applied in place (pool
+        #: shrink/expand + mesh re-bucket + allocator re-plan) without
+        #: dropping in-flight requests.
+        self.elastic = elastic
+        #: measured-rate store (obs.prof.ProfileStore) — when installed
+        #: alongside a profiler, every reshape re-plan folds this run's
+        #: dispatch profile in and re-fits per-token decode rates, so the
+        #: allocator's knee model tracks measurement instead of analytic
+        #: constants (ROADMAP item 1's first slice).
+        self.profile_store = profile_store
+        #: the allocation as constructed — reshapes re-plan in place, so
+        #: ``run`` restores this before every run to keep warm runs
+        #: identical.
+        self._allocation0 = allocation
+        self._dmult_full = (sharding.axis_size("data")
+                            if sharding is not None else 1)
+        self._dmult = self._dmult_full
         #: the most recent run's cache pool (set by ``run``): the audit
         #: surface for chaos tests and replay harnesses.
         self.pool = None
@@ -634,6 +662,17 @@ class ServeEngine:
             self.injector.bind(vocab_size=self.cfg.vocab_size,
                                max_len=self.max_len, n_slots=n_slots)
             self.injector.reset()
+        if self.elastic is not None:
+            self.elastic.reset()
+        # reshapes re-plan the allocation in place mid-run: restore the
+        # constructed plan so warm-up double-runs replay identically.
+        self.allocation = self._allocation0
+        #: live mesh bucketing multiple — a device_fail reshape collapses
+        #: it to 1 (non-divisible buckets fall back to replicated
+        #: shardings: degraded but exact), a device_join restores it.
+        self._dmult_full = (self.sharding.axis_size("data")
+                            if self.sharding is not None else 1)
+        self._dmult = self._dmult_full
         c = RunObs(self.tracer)
         tr = c.tracer
         if tr:
@@ -765,6 +804,10 @@ class ServeEngine:
             mean_occupancy=occ_mean,
             max_occupancy=occ_max,
             decode_util=m.series_stats("util[decode]")[0],
+            scale_ups=int(m.value("scale_ups")),
+            scale_downs=int(m.value("scale_downs")),
+            migrated_blocks=int(m.value("migrated_blocks")),
+            replans=int(m.value("replans")),
         )
         return stats
 
@@ -782,7 +825,10 @@ class ServeEngine:
             occ = (1.0 - pool.free_blocks / pool.n_blocks
                    if pool.n_blocks else 0.0)
         else:
-            occ = len(sched.active) / n_slots if n_slots else 0.0
+            # live capacity, not physical slots: a reshape-revoked slot no
+            # longer counts as headroom the elastic controller could fill.
+            cap = getattr(pool, "capacity", n_slots)
+            occ = len(sched.active) / cap if cap else 0.0
         m.set("occupancy", occ)
         every = self.metrics_every
         if every and c.boundaries % every == 0:
@@ -855,20 +901,37 @@ class ServeEngine:
             c.tracer.emit("recover", kind=cause, action="drop",
                           req=req.job_id, detail=req.n_retries)
 
-    def _can_ever_admit(self, pool, req) -> bool:
-        """Whether the CURRENT pool capacity could ever admit ``req`` —
-        the difference between "wait for blocks to free" (retry) and "the
-        shrunken pool will never hold it" (drop). Mirrors
+    def _pending_units(self, pool, step) -> int:
+        """Capacity units scheduled to ARRIVE after ``step``: pending
+        ``pool_restore`` / ``device_join`` faults plus the elastic
+        controller's unexercised scale-up headroom — the difference
+        between "this pool will never hold it" (drop) and "capacity is
+        coming back" (hold under bounded retry)."""
+        pend = 0
+        if self.injector is not None and step is not None:
+            pend += self.injector.pending_capacity(step)
+        if self.elastic is not None:
+            pend += self.elastic.pending_units(pool)
+        return pend
+
+    def _can_ever_admit(self, pool, req, step=None) -> bool:
+        """Whether the pool capacity — current PLUS capacity scheduled to
+        return (pending restores/joins, proactive scale-up headroom) —
+        could ever admit ``req``: the difference between "wait for blocks"
+        (retry/hold) and "will never hold it" (drop). Mirrors
         ``validate_request``'s arithmetic against the live ``n_blocks``.
         Conservative on prefix hits: a request droppable by this rule
         might have admitted via cached blocks, but bounded retries have
         already been burned by then."""
         if not hasattr(pool, "blocks_for"):
-            return True                      # contiguous slots never shrink
+            return True                      # contiguous slots never vanish
         need = len(req.prompt) + req.max_new_tokens
-        return (pool.blocks_for(need) <= pool.n_blocks
+        if need > pool.max_len:
+            return False                     # no capacity fixes the span
+        cap = pool.n_blocks + self._pending_units(pool, step)
+        return (pool.blocks_for(need) <= cap
                 and pool.blocks_for(len(req.prompt)) + pool.watermark_blocks
-                <= pool.n_blocks)
+                <= cap)
 
     def _chaos_admission(self, sched, pool, c: RunObs) -> None:
         """Bounded retry-with-backoff for waiting requests a ``pool_shrink``
@@ -879,9 +942,9 @@ class ServeEngine:
         for r in list(sched.waiting):
             if r.arrival_time > sched.step:
                 continue
-            if self._can_ever_admit(pool, r):
-                r.n_retries = 0              # capacity is back: clean slate
-                continue
+            if self._can_ever_admit(pool, r, step=sched.step):
+                r.n_retries = 0              # capacity is back (or coming
+                continue                     # back): clean slate
             if sched.step < r.next_retry:
                 continue
             r.n_retries += 1
@@ -951,6 +1014,29 @@ class ServeEngine:
             if tr:
                 tr.emit("recover", kind="pool_shrink", action="restore",
                         req=None, detail=got)
+        elif f.kind == "device_fail":
+            # a data-parallel device leaves: its share of the pool is
+            # revoked AND the mesh bucketing multiple collapses to 1, so
+            # subsequent buckets fall back to replicated shardings
+            # (degraded but exact). In-flight rows keep their device
+            # state — the reshape is reorder-only.
+            took = self._apply_scale(sched, pool, state, c, ScalePlan(
+                kind="scale_down", units=f.blocks, reason="device_fail",
+                step=float(sched.step), dmult=1))
+            if tr:
+                tr.emit("fault_inject", kind=f.kind, target=None, mag=took)
+            if f.restore_after is not None:
+                # schedule the join even when 0 blocks were revocable —
+                # the mesh multiple must still be restored.
+                inj.defer_restore(f, float(sched.step), took)
+        elif f.kind == "device_join":
+            got = self._apply_scale(sched, pool, state, c, ScalePlan(
+                kind="scale_up", units=f.blocks, reason="device_join",
+                step=float(sched.step), dmult=self._dmult_full))
+            c.inc("recoveries")
+            if tr:
+                tr.emit("recover", kind="device_fail", action="restore",
+                        req=None, detail=got)
         elif f.kind == "slot_kill":
             slot = inj.pick_slot(list(sched.active), f.slot)
             if slot is None:
@@ -988,13 +1074,156 @@ class ServeEngine:
                 reqs.append(r)          # stats score the injected load too
                 try:
                     sched.submit(r)
-                except ValueError:      # can never fit this pool: drop at
-                    self._drop(sched, r, c, cause="burst_unservable")
+                except ValueError:
+                    # the CURRENT pool can never fit it — but a scheduled
+                    # restore/join may bring that capacity back: hold it
+                    # for the bounded-retry path instead of dropping.
+                    if self._can_ever_admit(pool, r, step=sched.step):
+                        sched.park(r)
+                        c.inc("recoveries")
+                        if tr:
+                            tr.emit("recover", kind=f.kind, action="retry",
+                                    req=r.job_id, detail=0)
+                    else:
+                        self._drop(sched, r, c, cause="burst_unservable")
         elif f.kind == "prefix_flush":
             flushed = pool.flush_prefix() if paged else 0
             if tr:
                 tr.emit("fault_inject", kind=f.kind, target=None,
                         mag=flushed)
+
+    # -- elastic reshapes (serve/elastic.py) -----------------------------------
+    def _apply_scale(self, sched, pool, state, c: RunObs, plan) -> int:
+        """Apply one ``ScalePlan`` at a horizon boundary — the ONLY place
+        reshapes happen, so every device-resident row (KV blocks, block
+        tables, decode tok/pos/stop) is at a consistent step when capacity
+        moves. Scale-down revokes idle capacity (in-flight rows keep their
+        state); scale-up returns revoked capacity first and, paged, grows
+        the pool PAST its constructed size via ``grow_physical`` — the
+        live blocks migrate into the reallocated buffers, timed and traced
+        as a ``migrate`` event. A ``dmult`` change re-buckets the mesh
+        'data' axis for every subsequent dispatch (widths that stop
+        dividing it fall back to replicated shardings — degraded but
+        exact). Afterwards tenant reserves re-split against the new
+        capacity and the allocator re-plans (``_replan``). Returns the
+        capacity units actually moved."""
+        tr = c.tracer
+        paged = isinstance(pool, BlockManager)
+        old_dmult = self._dmult
+        if plan.kind == "scale_down":
+            moved = pool.shrink(plan.units)
+        else:
+            moved = pool.expand(plan.units)  # revoked ledger first
+            extra = plan.units - moved
+            if extra > 0 and paged:
+                live = (pool._total_blocks - len(pool._free_blocks)
+                        - len(pool._revoked))
+                t0 = time.perf_counter()
+                sh = (self.sharding.cache_sharding
+                      if self.sharding is not None else None)
+                added = pool.grow_physical(extra, sharding=sh)
+                if added:
+                    moved += added
+                    c.inc("migrated_blocks", live)
+                    if tr:
+                        tr.emit("migrate", blocks=live, added=added,
+                                dur_s=time.perf_counter() - t0)
+        if plan.dmult is not None:
+            self._dmult = max(int(plan.dmult), 1)
+        if not moved and self._dmult == old_dmult:
+            return 0                         # nothing applied: no event
+        c.inc("scale_ups" if plan.kind == "scale_up" else "scale_downs")
+        if tr:
+            tr.emit(plan.kind, units=moved, capacity=pool_capacity(pool),
+                    dmult=self._dmult, reason=plan.reason)
+        if moved and paged and self.allocation is not None:
+            pool.tenant_reserves = self.allocation.rescaled_reserves(
+                pool.n_blocks)
+        if moved:
+            self._replan(sched, pool, c)
+        if self.elastic is not None:
+            self.elastic.note_scale(sched.step, plan)
+        if paged:
+            pool.audit()                     # conservation must hold HERE,
+                                             # after every migration
+        return moved
+
+    def _replan(self, sched, pool, c: RunObs) -> None:
+        """Re-run the profile + allocate pipeline against the reshaped
+        capacity: tenant demand is re-profiled from the LIVE request mix,
+        per-token decode rates come from the measured ``ProfileStore`` fit
+        when one is installed (this run's dispatch profile folds in first,
+        so the fit reads the freshest rates), and the allocator re-plans
+        budgets, K-knees, and lane shares for the new pool — calibration
+        tracks measurement across every reshape instead of the one plan
+        struck at startup. A tenant-carrying engine that started WITHOUT a
+        plan gets its first one here (capacity just changed under it, so
+        the slack-only scheduler now wants budgets). Allocation-only:
+        outputs stay token-identical."""
+        if self.tenants is None:
+            return
+        from repro.serve.tenant import (plan_allocation, profile_class,
+                                        profiles_from_requests)
+        max_k = (self.allocation.max_k if self.allocation is not None
+                 else self.decode_horizon)
+        store = self.profile_store
+        if store is not None and self.profiler:
+            store.add_run(self.profiler, arch=self.cfg.arch_id,
+                          backend=self.cache_kind)
+        total = pool_capacity(pool)
+        live = list(sched.waiting) + list(sched.active.values())
+        units_for = ((lambda r: pool.blocks_for(len(r.prompt)
+                                                + r.max_new_tokens))
+                     if hasattr(pool, "blocks_for") else None)
+        profiles = profiles_from_requests(
+            self.tenants, live, total_units=total, units_for=units_for,
+            max_k=max_k, store=store, arch=self.cfg.arch_id,
+            backend=self.cache_kind)
+        for t in self.tenants:
+            if t.tenant_id not in profiles:  # drained tenant: keep a
+                profiles[t.tenant_id] = profile_class(  # minimal profile
+                    t.tenant_id, units_per_req=1, concurrency=1,
+                    total_units=total, max_k=max_k,
+                    store=store, arch=self.cfg.arch_id,
+                    backend=self.cache_kind)
+        wm = (pool.watermark_blocks if hasattr(pool, "watermark_blocks")
+              else 0)
+        self.allocation = plan_allocation(
+            self.tenants, profiles, total, total_lanes=self.prefill_lanes,
+            max_k=max_k, watermark_units=wm)
+        sched.allocation = self.allocation
+        if isinstance(pool, BlockManager):
+            pool.tenant_reserves = self.allocation.reserves()
+        c.inc("replans")
+        if c.tracer:
+            c.tracer.emit("recover", kind="reshape", action="replan",
+                          req=None, detail=int(total))
+
+    def _submit_all(self, sched, pool, reqs) -> None:
+        """Submit the run's initial requests. A request the CONSTRUCTED
+        pool cannot validate is parked instead of rejected when scheduled
+        capacity (a pending ``device_join``/``pool_restore``, or elastic
+        scale-up headroom) will cover it — the bounded-retry admission
+        path then holds it until the capacity arrives. Without pending
+        capacity the submit error propagates exactly as before."""
+        for i, r in enumerate(reqs):
+            r.job_id = i
+            try:
+                sched.submit(r)
+            except ValueError:
+                if not self._can_ever_admit(pool, r, step=float(sched.step)):
+                    raise
+                sched.park(r)
+
+    def _elastic_poll(self, sched, pool, state, c: RunObs) -> None:
+        """Ask the elastic controller for a proactive reshape at this
+        boundary (None without a controller, inside its cooldown, or when
+        every signal sits between the thresholds)."""
+        if self.elastic is None:
+            return
+        plan = self.elastic.decide(sched.step, pool, c.metrics)
+        if plan is not None:
+            self._apply_scale(sched, pool, state, c, plan)
 
     def _could_admit_arrival(self, sched) -> bool:
         """Whether shortening the horizon for the next arrival could pay
@@ -1133,25 +1362,21 @@ class ServeEngine:
     def _run_contiguous(self, reqs, n_slots, c: RunObs):
         self.pool = pool = CachePool(self.model, n_slots, self.max_len)
         if self.sharding is not None:
-            pool.buffers = jax.device_put(pool.buffers,
-                                          self.sharding.cache_sharding)
+            pool.buffers = self.sharding.reshard_cache(pool.buffers)
         sched = self._make_sched(pool)
-        for i, r in enumerate(reqs):
-            r.job_id = i
-            sched.submit(r)
+        self._submit_all(sched, pool, reqs)
 
         state = _DecodeState(n_slots, sharding=self.sharding)
         tr = c.tracer
         prof = self.profiler
-        dmult = (self.sharding.axis_size("data")
-                 if self.sharding is not None else 1)
 
         while sched.has_work:
             if self.injector is not None:
                 self._apply_faults(sched, pool, state, c, n_slots, reqs)
+            self._elastic_poll(sched, pool, state, c)
             self._evict(sched, state, c)
             sched.admit(hold=self._fault_hold(sched))
-            if self.injector is not None:
+            if self.injector is not None or self.elastic is not None:
                 self._chaos_admission(sched, pool, c)
             admitted = sched.drain_prefill()
             t0 = time.perf_counter()
@@ -1205,11 +1430,11 @@ class ServeEngine:
             # restore it only on rounds that actually admitted (the
             # horizon's out_shardings keeps the cache sharded otherwise).
             if self.sharding is not None and admitted:
-                pool.buffers = jax.device_put(
-                    pool.buffers, self.sharding.cache_sharding)
+                pool.buffers = self.sharding.reshard_cache(pool.buffers)
 
             h = self._pick_h(sched, sorted(sched.active))
-            self._decode_boundary(sched, pool, state, c, n_slots, dmult, h)
+            self._decode_boundary(sched, pool, state, c, n_slots,
+                                  self._dmult, h)
         self._evict(sched, state, c)
 
     # -- paged loop --------------------------------------------------------------
@@ -1365,7 +1590,7 @@ class ServeEngine:
             if blocked is None:
                 return h, len(victims), victims
             if len(sched.active) == 1:
-                if self.injector is None:
+                if self.injector is None and self.elastic is None:
                     raise RuntimeError(
                         "paged KV pool exhausted with a single active "
                         "request; grow n_blocks or lower max_new_tokens")
@@ -1401,17 +1626,14 @@ class ServeEngine:
                                         prefix_cache=self.prefix_cache,
                                         tracer=self.tracer)
         if self.sharding is not None:
-            pool.buffers = jax.device_put(pool.buffers,
-                                          self.sharding.cache_sharding)
+            pool.buffers = self.sharding.reshard_cache(pool.buffers)
         if self.allocation is not None:
             # per-tenant watermark headroom: a tenant's admissions may
             # spend its OWN reserve (insensitive tenants donate theirs
             # implicitly — see BlockManager._blocks_clear_watermark).
             pool.tenant_reserves = self.allocation.reserves()
         sched = self._make_sched(pool)
-        for i, r in enumerate(reqs):
-            r.job_id = i
-            sched.submit(r)
+        self._submit_all(sched, pool, reqs)
 
         state = _DecodeState(n_slots, max_blocks=pool.max_blocks,
                              sharding=self.sharding)
@@ -1419,15 +1641,14 @@ class ServeEngine:
         stop_np = np.zeros((n_slots,), np.int64)
         tr = c.tracer
         peak_report = pool.report()
-        dmult = (self.sharding.axis_size("data")
-                 if self.sharding is not None else 1)
 
         while sched.has_work:
             if self.injector is not None:
                 self._apply_faults(sched, pool, state, c, n_slots, reqs)
+            self._elastic_poll(sched, pool, state, c)
             self._evict(sched, state, c)
             sched.admit(hold=self._fault_hold(sched))
-            if self.injector is not None:
+            if self.injector is not None or self.elastic is not None:
                 self._chaos_admission(sched, pool, c)
             admitted = sched.drain_prefill()
             if admitted:
@@ -1455,7 +1676,7 @@ class ServeEngine:
                 if nxt is None:
                     break
                 if not admitted and nxt <= sched.step:
-                    if self.injector is None:
+                    if self.injector is None and self.elastic is None:
                         raise RuntimeError(
                             "paged KV pool cannot admit any waiting request; "
                             "grow n_blocks or lower the watermark")
@@ -1472,8 +1693,7 @@ class ServeEngine:
                 continue
 
             if self.sharding is not None and admitted:
-                pool.buffers = jax.device_put(
-                    pool.buffers, self.sharding.cache_sharding)
+                pool.buffers = self.sharding.reshard_cache(pool.buffers)
 
             h = self._pick_h(sched, sorted(sched.active))
             h, n_pre, victims = self._ensure_growth(sched, pool, pos_np,
@@ -1491,7 +1711,7 @@ class ServeEngine:
 
             act = sorted(sched.active)
             counts = self._decode_boundary(sched, pool, state, c, n_slots,
-                                           dmult, h)
+                                           self._dmult, h)
             for slot, m in zip(act, counts):
                 pos_np[slot] += m
             snap = pool.report()

@@ -115,6 +115,8 @@ class BlockManager:
         #: sensitive ones the allocator favoured. Empty dict = the flat
         #: single-watermark rule.
         self.tenant_reserves: Dict[str, int] = {}
+        self._dtype = dtype            # kept for grow_physical reallocation
+        self._block_axes = None        # leaf block-axis map, probed lazily
         self.buffers = model.init_paged_cache(self.n_blocks, block_size,
                                               dtype)
         self._free_blocks = deque(range(self.n_blocks))
@@ -455,6 +457,55 @@ class BlockManager:
         self.n_blocks += give
         self.watermark_blocks = math.ceil(self.watermark * self.n_blocks)
         return give
+
+    def grow_physical(self, n: int, sharding=None) -> int:
+        """Grow TRUE capacity past the construction-time allocation (a
+        ``device_join`` bringing more memory than any failure revoked):
+        allocate larger cache buffers and migrate every existing block's
+        content into them along each leaf's block axis — a pure state move,
+        never a recompute, so in-flight decodes resume token-identically.
+        ``sharding`` (the plan's ``cache_sharding`` pytree) re-places the
+        migrated buffers on the mesh; the block axis is unsharded in the
+        paged specs, so the same NamedShardings apply at any capacity.
+
+        Block ids are stable — the new blocks take ids past the old
+        capacity and join the free list — so live tables, prefix-cache
+        entries and the revocation ledger all survive untouched. Returns
+        the blocks added (0 for ``n <= 0``)."""
+        import jax
+
+        n = int(n)
+        if n <= 0:
+            return 0
+        if self._block_axes is None:
+            from repro.serve.cache import _batch_axis
+            probe_a = jax.eval_shape(
+                lambda: self.model.init_paged_cache(3, self.block_size,
+                                                    self._dtype))
+            probe_b = jax.eval_shape(
+                lambda: self.model.init_paged_cache(5, self.block_size,
+                                                    self._dtype))
+            self._block_axes = jax.tree_util.tree_map(_batch_axis, probe_a,
+                                                      probe_b)
+        old_total = self._total_blocks
+        new_buffers = self.model.init_paged_cache(old_total + n,
+                                                  self.block_size,
+                                                  self._dtype)
+
+        def migrate(new, old, ax):
+            sel = (slice(None),) * ax + (slice(0, old.shape[ax]),)
+            return new.at[sel].set(old)
+
+        new_buffers = jax.tree_util.tree_map(migrate, new_buffers,
+                                             self.buffers, self._block_axes)
+        if sharding is not None:
+            new_buffers = jax.device_put(new_buffers, sharding)
+        self.buffers = new_buffers
+        self._free_blocks.extend(range(old_total, old_total + n))
+        self._total_blocks = old_total + n
+        self.n_blocks += n
+        self.watermark_blocks = math.ceil(self.watermark * self.n_blocks)
+        return n
 
     def flush_prefix(self) -> int:
         """Force-evict the prefix cache (a ``prefix_flush`` fault).

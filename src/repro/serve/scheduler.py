@@ -140,6 +140,16 @@ class ContinuousScheduler:
                 f"positions but the pool holds {self.pool.max_len}")
         self.waiting.append(req)
 
+    def park(self, req: ServeRequest) -> None:
+        """Queue a request the CURRENT pool cannot validate but scheduled
+        capacity — a pending restore/join fault, or proactive scale-up
+        headroom — will later cover: it waits for the engine's bounded
+        retry admission instead of being rejected at submit. Safe because
+        ``admit`` re-checks capacity every round (``alloc_for`` simply
+        fails while the pool is still small), so a parked request can
+        never corrupt the pool — only wait for it."""
+        self.waiting.append(req)
+
     @property
     def has_work(self) -> bool:
         return bool(self.waiting or self.active)

@@ -66,13 +66,26 @@ class ServeSharding:
         mesh 'data' axis when the width divides it (bucket widths are
         rounded to multiples of 'data' for exactly this; only the capped
         full-width bucket of a non-divisible pool falls back to
-        replicated)."""
+        replicated). An elastic mesh re-bucket (serve/elastic.py) exploits
+        the same fallback: when a ``device_fail`` collapses the engine's
+        bucketing multiple, widths stop dividing 'data' and land here as
+        replicated layouts — degraded but exact — until a ``device_join``
+        restores the multiple."""
         ax = "data" if width % self.axis_size("data") == 0 else None
         return {
             "tokens": NamedSharding(self.mesh, P(ax, None)),
             "pos": NamedSharding(self.mesh, P(ax)),
             "tables": NamedSharding(self.mesh, P(ax, None)),
         }
+
+    def reshard_cache(self, buffers):
+        """Re-place a cache pytree under the plan's cache sharding — the
+        migration primitive every reshape path shares: after an elastic
+        ``grow_physical`` (the reallocated buffers land on whatever
+        devices the scatter left them on), and after eager host-side pool
+        writes that lose the NamedSharding layout. One gather/scatter per
+        leaf, driven by ``cache_sharding``'s partition spec."""
+        return jax.device_put(buffers, self.cache_sharding)
 
 
 def make_serve_sharding(cfg, n_slots: int, max_len: int, mesh=None, *,

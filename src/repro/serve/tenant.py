@@ -399,20 +399,35 @@ class TenantAllocation:
 
     def rescaled_reserves(self, new_total: int) -> Dict[str, int]:
         """Headroom re-fit to a pool whose capacity changed mid-run (a
-        ``pool_shrink``/``pool_restore`` fault): each tenant's reserve
-        scales by ``new_total / total_units`` with largest-remainder
-        rounding, so the proportions the allocator planned survive the
-        shrink and the summed reserve never exceeds the scaled original —
-        reserves pinned to the old capacity would deadlock admission on a
-        pool that no longer has that many blocks."""
+        ``pool_shrink``/``pool_restore`` fault or an elastic reshape): each
+        tenant's reserve scales by ``new_total / total_units`` with
+        largest-remainder rounding, so the proportions the allocator
+        planned survive the shrink and the summed reserve never exceeds
+        the scaled original — reserves pinned to the old capacity would
+        deadlock admission on a pool that no longer has that many blocks.
+
+        Ties in the rounding remainder break on the tenant id, so the
+        result is a pure function of (shares, new_total) — reshapes replay
+        deterministically regardless of dict insertion order. As a final
+        backstop the summed reserve is clamped to the new capacity
+        (trimming the largest reserves first): a hand-built allocation
+        whose headroom exceeds the pool must not wedge admission."""
         if self.total_units <= 0:
             return self.reserves()
         frac = max(0.0, min(1.0, new_total / self.total_units))
         raw = {tid: s.headroom * frac for tid, s in self.shares.items()}
         out = {tid: int(v) for tid, v in raw.items()}
         owed = int(round(sum(raw.values()))) - sum(out.values())
-        for tid in sorted(raw, key=lambda t: out[t] - raw[t])[:max(owed, 0)]:
+        for tid in sorted(raw, key=lambda t: (out[t] - raw[t], t)
+                          )[:max(owed, 0)]:
             out[tid] += 1
+        over = sum(out.values()) - max(int(new_total), 0)
+        while over > 0:
+            tid = max(sorted(out), key=lambda t: out[t])
+            if out[tid] <= 0:
+                break
+            out[tid] -= 1
+            over -= 1
         return out
 
     def k_cap_for(self, tenant_ids) -> int:

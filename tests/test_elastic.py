@@ -1,0 +1,289 @@
+"""Elastic serving tests: ScalePlan validation, the threshold controller's
+decisions and cooldown, reactive device_fail/device_join reshapes with
+token identity and block-audit conservation, grow_physical migration past
+the constructed pool, hold-don't-drop admission against scheduled
+restores, tenant re-planning at reshape boundaries, and the
+rescaled_reserves edge cases (zero-headroom tenants, single tenant,
+over-committed reserves, tie-break determinism)."""
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.obs import MetricsRegistry, Tracer, validate_events
+from repro.serve import (ElasticController, FaultInjector, FaultSchedule,
+                         ScalePlan, ServeEngine, ServeRequest, Tenant,
+                         TenantAllocation, TenantRegistry, TenantShare,
+                         run_replay)
+from repro.serve.elastic import pool_capacity
+
+
+def _requests(cfg, lengths, arrivals=None, max_new=5, seed=5, tenants=None):
+    rng = np.random.default_rng(seed)
+    arrivals = arrivals or [0.0] * len(lengths)
+    tenants = tenants or ["default"] * len(lengths)
+    return [ServeRequest(rng.integers(1, cfg.vocab_size, size=s)
+                         .astype(np.int32),
+                         max_new_tokens=max_new, arrival_time=a, tenant=t)
+            for s, a, t in zip(lengths, arrivals, tenants)]
+
+
+def _chaos_engine(cfg, spec, seed=0, **kw):
+    inj = FaultInjector(FaultSchedule.from_spec(spec, seed=seed))
+    kw.setdefault("cache", "paged")
+    kw.setdefault("block_size", 8)
+    kw.setdefault("decode_horizon", 4)
+    return ServeEngine(cfg, max_len=32, n_slots=3, injector=inj, **kw)
+
+
+class _Pool:
+    """Capacity-only pool stand-in for controller decision tests."""
+
+    def __init__(self, n_blocks, free_blocks=None):
+        self.n_blocks = n_blocks
+        self.free_blocks = n_blocks if free_blocks is None else free_blocks
+
+
+# ---------------------------------------------------------------------------
+# ScalePlan + controller decisions
+# ---------------------------------------------------------------------------
+def test_scale_plan_validation():
+    p = ScalePlan(kind="scale_up", units=4, reason="occupancy")
+    assert p.dmult is None
+    # a pure mesh re-bucket moves zero units but must carry a dmult
+    ScalePlan(kind="scale_up", units=0, reason="device_join", dmult=8)
+    with pytest.raises(ValueError, match="unknown scale kind"):
+        ScalePlan(kind="sideways", units=4, reason="occupancy")
+    with pytest.raises(ValueError, match="negative"):
+        ScalePlan(kind="scale_up", units=-1, reason="occupancy")
+    with pytest.raises(ValueError, match="move units or change dmult"):
+        ScalePlan(kind="scale_down", units=0, reason="occupancy")
+
+
+def test_controller_thresholds():
+    m = MetricsRegistry()
+    ctl = ElasticController(queue_hi=4, step_units=8, max_units=32,
+                            min_units=8, cooldown=0.0)
+    pool = _Pool(16)
+    # no boundary sampled yet: never scale before the run starts decoding
+    assert ctl.decide(0, pool, m) is None
+    m.gauge("occupancy").set(0.95)
+    m.gauge("queue_depth").set(0)
+    up = ctl.decide(1, pool, m)
+    assert (up.kind, up.reason, up.units) == ("scale_up", "occupancy", 8)
+    # growth is capped at max_units total capacity
+    assert ctl.decide(2, _Pool(30), m).units == 2
+    assert ctl.decide(3, _Pool(32), m) is None
+    # queue depth alone triggers growth at moderate occupancy
+    m.gauge("occupancy").set(0.5)
+    m.gauge("queue_depth").set(4)
+    assert ctl.decide(4, pool, m).reason == "queue_depth"
+    # exhausted slack on any tenant triggers growth
+    m.gauge("queue_depth").set(0)
+    m.gauge("slack[lat]").set(-2.0)
+    assert ctl.decide(5, pool, m).reason == "slack"
+    m.gauge("slack[lat]").set(9.0)
+    # idle pool shrinks, floored at min_units AND at held blocks
+    m.gauge("occupancy").set(0.05)
+    down = ctl.decide(6, pool, m)
+    assert (down.kind, down.units) == ("scale_down", 8)
+    # 14 of 16 blocks held: shrink stops at the held floor, not min_units
+    assert ctl.decide(7, _Pool(16, free_blocks=2), m).units == 2
+    assert ctl.decide(8, _Pool(16, free_blocks=0), m) is None  # fully held
+    assert ctl.decide(9, _Pool(8), m) is None                  # at the floor
+    # a queued request vetoes the shrink
+    m.gauge("queue_depth").set(1)
+    assert ctl.decide(10, pool, m) is None
+
+
+def test_controller_cooldown_shared_and_reset():
+    m = MetricsRegistry()
+    m.gauge("occupancy").set(0.99)
+    m.gauge("queue_depth").set(0)
+    ctl = ElasticController(step_units=4, max_units=32, cooldown=10.0)
+    pool = _Pool(16)
+    assert ctl.decide(0, pool, m) is not None
+    # an APPLIED reshape (reactive or proactive) starts the cooldown
+    ctl.note_scale(0, ScalePlan(kind="scale_down", units=4,
+                                reason="device_fail"))
+    assert ctl.decide(5, pool, m) is None
+    assert ctl.decide(10, pool, m) is not None
+    assert ctl.decisions == [("scale_down", "device_fail", 0.0)]
+    ctl.reset()
+    assert ctl.decisions == [] and ctl.decide(0, pool, m) is not None
+    # limits bind to the first capacity seen when left unset
+    fresh = ElasticController()
+    assert fresh.pending_units(_Pool(12)) == 0
+    assert fresh.max_units == 12 and fresh.min_units == 12
+    with pytest.raises(ValueError, match="occupancy_lo"):
+        ElasticController(occupancy_lo=0.9, occupancy_hi=0.5)
+    with pytest.raises(ValueError, match="step_units"):
+        ElasticController(step_units=0)
+
+
+# ---------------------------------------------------------------------------
+# reactive reshapes: device_fail / device_join on the live engine
+# ---------------------------------------------------------------------------
+def test_device_fail_join_token_identical_and_audited():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    lengths, arrivals = [9, 12, 10, 8], [0, 0, 4, 6]
+    eng = _chaos_engine(cfg, "device_fail@3:blocks=6:restore_after=4",
+                        n_blocks=12, tracer=Tracer())
+    reqs = _requests(cfg, lengths, arrivals=arrivals, max_new=6)
+    res = run_replay(eng, reqs, verify=True, ref_cfg=cfg, ref_max_len=32)
+    assert {k for k, _ in res.faults} == {"device_fail", "device_join"}
+    assert res.stats.scale_downs == 1 and res.stats.scale_ups == 1
+    assert res.stats.dropped == 0
+    assert res.verified and not res.mismatched
+    eng.pool.audit()
+    assert not validate_events(list(eng.tracer.events))
+    evs = {e["ev"] for e in eng.tracer.events}
+    assert {"scale_up", "scale_down"} <= evs
+
+
+def test_device_join_grows_past_pool_and_migrates():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    # join grants MORE capacity than the pool was built with: the engine
+    # must grow_physical and migrate every live KV block, token-identical.
+    eng = _chaos_engine(cfg, "device_join@3:blocks=8", n_blocks=8,
+                        tracer=Tracer())
+    reqs = _requests(cfg, [9, 12, 10], max_new=6)
+    res = run_replay(eng, reqs, verify=True, ref_cfg=cfg, ref_max_len=32)
+    assert res.verified and res.stats.dropped == 0
+    assert eng.pool.n_blocks == 16 and eng.pool._total_blocks >= 16
+    assert res.stats.migrated_blocks > 0
+    eng.pool.audit()
+    migrates = [e for e in eng.tracer.events if e["ev"] == "migrate"]
+    assert migrates and migrates[0]["added"] >= 1
+    assert migrates[0]["blocks"] == res.stats.migrated_blocks
+
+
+def test_hold_until_restore_drops_nothing():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    # the no-restore twin of this schedule drops late arrivals
+    # (test_pool_shrink_drops_score_separately); with a scheduled join the
+    # admission path must HOLD them against pending capacity instead.
+    eng = _chaos_engine(cfg, "device_fail@2:blocks=10:restore_after=4",
+                        n_blocks=12, max_admit_retries=2)
+    reqs = _requests(cfg, [9, 12, 10, 11], arrivals=[0, 0, 6, 6], max_new=4)
+    res = run_replay(eng, reqs, verify=True, ref_cfg=cfg, ref_max_len=32)
+    assert res.stats.dropped == 0 and not res.dropped
+    assert res.stats.scale_ups == 1        # the join landed mid-run
+    assert res.verified and not res.mismatched
+    eng.pool.audit()
+
+
+def test_proactive_scale_up_is_exact():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    # start well under the ceiling with a deep queue: the controller must
+    # reclaim capacity proactively without disturbing greedy outputs.
+    ctl = ElasticController(queue_hi=2, step_units=8, max_units=16,
+                            cooldown=2.0)
+    inj = FaultInjector(FaultSchedule())
+    eng = ServeEngine(cfg, max_len=32, n_slots=3, cache="paged",
+                      block_size=8, n_blocks=8, decode_horizon=2,
+                      injector=inj, elastic=ctl, tracer=Tracer())
+    reqs = _requests(cfg, [9, 12, 10, 8, 11], max_new=6)
+    res = run_replay(eng, reqs, verify=True, ref_cfg=cfg, ref_max_len=32)
+    assert res.stats.scale_ups >= 1
+    assert any(r == "queue_depth" or r == "occupancy"
+               for _, r, _ in ctl.decisions)
+    assert res.verified and res.stats.dropped == 0
+    eng.pool.audit()
+
+
+def test_reshape_replans_tenant_allocation():
+    cfg = get_config("llama3.2-1b", smoke=True)
+    reg = TenantRegistry([Tenant("lat", weight=2.0, slo_steps=24.0),
+                          Tenant("batch")])
+    eng = _chaos_engine(cfg, "device_fail@3:blocks=4:restore_after=4",
+                        n_blocks=12, tenants=reg, policy="slo")
+    reqs = _requests(cfg, [9, 12, 10, 8], max_new=5,
+                     tenants=["batch", "lat", "batch", "lat"])
+    out, st = eng.run(reqs)
+    # every applied reshape re-profiles the live classes and re-plans
+    assert st.replans == st.scale_ups + st.scale_downs == 2
+    assert eng.allocation is not None
+    assert set(eng.allocation.shares) <= {"batch", "lat"}
+    assert sum(eng.pool.tenant_reserves.values()) <= eng.pool.n_blocks
+    assert st.dropped == 0
+    eng.pool.audit()
+
+
+def test_elastic_run_is_repeatable():
+    cfg = get_config("llama3.2-1b", smoke=True)
+
+    def once():
+        ctl = ElasticController(queue_hi=2, step_units=4, max_units=16,
+                                cooldown=2.0)
+        eng = _chaos_engine(cfg, "device_fail@2:blocks=6:restore_after=4",
+                            n_blocks=16, elastic=ctl, decode_horizon=2)
+        out, st = eng.run(_requests(cfg, [9, 12, 10, 8], max_new=5))
+        return ([r.output for r in out], list(ctl.decisions),
+                (st.scale_ups, st.scale_downs, st.replans))
+
+    assert once() == once()
+
+
+# ---------------------------------------------------------------------------
+# rescaled_reserves edge cases
+# ---------------------------------------------------------------------------
+def test_rescaled_reserves_zero_headroom_tenant():
+    alloc = TenantAllocation(
+        shares={"a": TenantShare("a", units=8, k_cap=4, lanes=2, headroom=6),
+                "z": TenantShare("z", units=8, k_cap=4, lanes=2, headroom=0)},
+        total_units=16, max_k=8)
+    for total in (16, 8, 3, 0):
+        out = alloc.rescaled_reserves(total)
+        assert out["z"] == 0                 # zero stays zero at every scale
+    assert alloc.rescaled_reserves(8)["a"] == 3
+
+
+def test_rescaled_reserves_single_tenant():
+    alloc = TenantAllocation(
+        shares={"solo": TenantShare("solo", units=16, k_cap=8, lanes=4,
+                                    headroom=5)},
+        total_units=16, max_k=8)
+    assert alloc.rescaled_reserves(16) == {"solo": 5}
+    assert alloc.rescaled_reserves(8) == {"solo": 2}   # round(2.5) -> 2
+    assert alloc.rescaled_reserves(1) == {"solo": 0}
+    assert alloc.rescaled_reserves(64) == {"solo": 5}  # frac capped at 1.0
+
+
+def test_rescaled_reserves_overcommit_clamped_to_pool():
+    # a hand-built allocation can promise more headroom than the pool has;
+    # the backstop trims the largest reserves first so admission never
+    # waits on blocks that cannot exist.
+    alloc = TenantAllocation(
+        shares={"a": TenantShare("a", units=4, k_cap=4, lanes=1, headroom=7),
+                "b": TenantShare("b", units=4, k_cap=4, lanes=1, headroom=3)},
+        total_units=8, max_k=8)
+    out = alloc.rescaled_reserves(6)
+    assert sum(out.values()) <= 6
+    assert out["a"] >= out["b"]
+    assert alloc.rescaled_reserves(2) in ({"a": 2, "b": 0}, {"a": 1, "b": 1})
+    assert sum(alloc.rescaled_reserves(0).values()) == 0
+
+
+def test_rescaled_reserves_tiebreak_is_order_free():
+    shares = {t: TenantShare(t, units=4, k_cap=4, lanes=1, headroom=3)
+              for t in ("b", "a", "c")}
+    fwd = TenantAllocation(shares=shares, total_units=12, max_k=8)
+    rev = TenantAllocation(
+        shares={t: shares[t] for t in sorted(shares, reverse=True)},
+        total_units=12, max_k=8)
+    # 3 tenants * 3 * 0.5 = 4.5 units: the odd unit must land on the same
+    # tenant regardless of dict insertion order
+    assert fwd.rescaled_reserves(6) == rev.rescaled_reserves(6)
+    out = fwd.rescaled_reserves(6)
+    assert sum(out.values()) in (4, 5) and max(out.values()) == 2
+
+
+def test_pool_capacity_both_backends():
+    from repro.serve import CachePool
+    from repro.models.api import build_model
+    model = build_model(get_config("llama3.2-1b", smoke=True))
+    pool = CachePool(model, 3, 32)
+    assert pool_capacity(pool) == 3
+    pool.shrink(1)
+    assert pool_capacity(pool) == 2
+    assert pool_capacity(_Pool(12)) == 12
